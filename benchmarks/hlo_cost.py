@@ -1,0 +1,442 @@
+"""Trip-count-aware HLO cost extraction.
+
+XLA's ``HloCostAnalysis`` (what ``compiled.cost_analysis()`` reports)
+visits each ``while`` body ONCE — for scan-over-layers models that
+undercounts FLOPs by ~num_layers x. This parser walks the optimized HLO
+text, builds the computation call graph (while bodies x known_trip_count,
+fusions, calls, conditionals) and accumulates:
+
+  * flops            — dot ops: 2 * prod(out dims) * K (contraction size
+                       from the lhs operand's definition);
+  * bytes            — sum of produced-value bytes (excluding free views:
+                       bitcast/GTE/tuple/parameter/constant), x2 for the
+                       write+read round trip — an HBM-traffic proxy;
+  * collectives      — result bytes per collective kind (all-gather,
+                       all-reduce, reduce-scatter, all-to-all,
+                       collective-permute), trip-multiplied.
+
+All quantities are PER DEVICE (the HLO is the post-GSPMD partitioned
+module). Validated against analytic 6*N*D in tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+                "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2,
+                "f32": 4, "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1,
+                "f8e5m2": 1, "u4": 1}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_FREE_OPS = {"bitcast", "get-tuple-element", "tuple", "parameter",
+             "constant", "iota", "copy-start", "copy-done",
+             "after-all", "partition-id"}
+
+_SHAPE_RE = re.compile(r"^(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*.*\)\s*->.*\{\s*$")
+_CALL_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"(\d+)"')
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+_DOT_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _parse_instr(line: str) -> Optional[Tuple[str, str, str]]:
+    """'  ROOT %x = TYPE op(...)...' -> (name, type_str, opcode).
+
+    Handles tuple types with nested parens/layouts/comments (regexes
+    can't — tuple types contain '/*index=5*/' and '{...}' freely)."""
+    s = line.strip()
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[:eq].lstrip("%")
+    rest = s[eq + 3:]
+    if rest.startswith("("):
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        type_str = rest[:end + 1]
+        rest2 = rest[end + 1:].strip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str = rest[:sp]
+        rest2 = rest[sp + 1:].strip()
+    par = rest2.find("(")
+    if par < 0:
+        return None
+    op = rest2[:par].strip()
+    if not re.fullmatch(r"[\w\-]+", op):
+        return None
+    return name, type_str, op
+
+
+def _parse_type(t: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE_RE.match(t)
+    if not m:
+        return None
+    dt = m.group(1)
+    if dt not in _DTYPE_BYTES:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return dt, dims
+
+
+def _nbytes(t: str) -> int:
+    """Bytes of a type string; tuples sum their array components."""
+    total = 0
+    for m in re.finditer(r"(\w+)\[([\d,]*)\]", t):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps: Dict[str, List[str]] = {}
+        self.entry: Optional[str] = None
+        self._split(text)
+        self._memo: Dict[str, tuple] = {}
+
+    def _split(self, text: str):
+        cur, name = None, None
+        for line in text.splitlines():
+            if not line.startswith(" ") and line.rstrip().endswith("{"):
+                m = _COMP_RE.match(line.strip())
+                if m:
+                    name = m.group(2)
+                    cur = []
+                    self.comps[name] = cur
+                    if m.group(1):
+                        self.entry = name
+                    continue
+            if line.startswith("}"):
+                cur = None
+                continue
+            if cur is not None:
+                cur.append(line)
+
+    # -- per-computation local costs ------------------------------------
+    def _local(self, name: str):
+        flops = 0.0
+        bytes_ = 0.0       # every produced value (pessimistic proxy)
+        hbm = 0.0          # fusion-realistic HBM traffic (see below)
+        coll = {k: 0.0 for k in COLLECTIVE_OPS}
+        coll_n = {k: 0 for k in COLLECTIVE_OPS}
+        calls: List[Tuple[str, int, bool]] = []
+        shapes: Dict[str, str] = {}
+        opcodes: Dict[str, str] = {}
+        lines = self.comps.get(name, [])
+        for line in lines:
+            m = _parse_instr(line)
+            if not m:
+                continue
+            shapes[m[0]] = m[1]
+            opcodes[m[0]] = m[2]
+
+        def _upcast(nm: str) -> bool:
+            # XLA CPU legalizes bf16 dots via hoisted bf16->f32 converts
+            # ('%convert*' instructions/fusions); TPU consumes bf16
+            # natively, so convert-fed dot traffic counts at bf16.
+            return nm.startswith("convert") and "f32" in shapes.get(nm, "")
+
+        def operand_bytes(l: str) -> float:
+            om = _OPERANDS_RE.search(l[l.find("("):] if "(" in l else l)
+            if not om:
+                return 0.0
+            total = 0.0
+            depth = 0
+            cur = []
+            parts = []
+            for ch in om.group(1):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                if ch == "," and depth == 0:
+                    parts.append("".join(cur))
+                    cur = []
+                else:
+                    cur.append(ch)
+            parts.append("".join(cur))
+            for part in parts:
+                nm = part.strip().split()[-1].lstrip("%") if part.strip() \
+                    else ""
+                t = shapes.get(nm)
+                if t:
+                    total += _nbytes(t)
+            return total
+
+        for line in lines:
+            m = _parse_instr(line)
+            if not m:
+                continue
+            iname, itype, op = m
+            if op not in _FREE_OPS:
+                bytes_ += _nbytes(itype)
+            # fusion-realistic HBM model: elementwise/broadcast/reduce
+            # chains fuse into their MXU/copy consumers on TPU; what hits
+            # HBM is matmul operands+outputs, data movement, cache
+            # updates, collectives, and while-loop carries.
+            if op in ("dot", "convolution"):
+                om = re.search(op + r"\(([^)]*)\)", line)
+                any_up = False
+                opb = 0.0
+                if om:
+                    for part in om.group(1).split(","):
+                        nm2 = part.strip().split()[-1].lstrip("%") \
+                            if part.strip() else ""
+                        t = shapes.get(nm2)
+                        if not t:
+                            continue
+                        b2 = _nbytes(t)
+                        if _upcast(nm2):
+                            b2 //= 2
+                            any_up = True
+                        opb += b2
+                ob = _nbytes(itype)
+                if any_up and "f32" in itype:
+                    ob //= 2  # result truncated back to bf16 on TPU
+                hbm += ob + opb
+            elif op in ("dynamic-slice", "dynamic-update-slice", "gather",
+                        "scatter", "concatenate", "copy", "transpose",
+                        "sort", "pad", "slice"):
+                hbm += 2.0 * _nbytes(itype)
+            elif any(op == k or op.startswith(k + "-")
+                     for k in COLLECTIVE_OPS):
+                hbm += 2.0 * _nbytes(itype)
+            elif op == "while":
+                # true loop carries are read+written from HBM every
+                # iteration (this is what makes per-token recurrent scans
+                # memory-catastrophic). Scan xs/ys are aliased stacked
+                # buffers, NOT carried traffic — heuristic: tuple elements
+                # whose leading dim equals the trip count are xs/ys and
+                # are excluded (their per-iter slices are counted via the
+                # body's dynamic-slice/DUS ops).
+                tm = _TRIP_RE.search(line)
+                trip = int(tm.group(1)) if tm else 1
+                carry = 0
+                for em in re.finditer(r"(\w+)\[([\d,]*)\]", itype):
+                    dt, dims = em.group(1), em.group(2)
+                    if dt not in _DTYPE_BYTES:
+                        continue
+                    dl = [int(d) for d in dims.split(",")] if dims else []
+                    if trip > 1 and dl and dl[0] == trip:
+                        continue  # stacked xs/ys buffer
+                    n = 1
+                    for d in dl:
+                        n *= d
+                    carry += n * _DTYPE_BYTES[dt]
+                hbm += 2.0 * carry * trip
+            if op == "dot":
+                out = _parse_type(itype)
+                ops_m = re.search(r"dot\(([^)]*)\)", line)
+                cdims = _DOT_CDIMS_RE.search(line)
+                if out and ops_m and cdims:
+                    lhs_name = ops_m.group(1).split(",")[0].strip()
+                    lhs_name = lhs_name.split()[-1].lstrip("%")
+                    lhs_t = shapes.get(lhs_name)
+                    k = 1
+                    if lhs_t:
+                        lhs = _parse_type(lhs_t)
+                        if lhs and cdims.group(1):
+                            for d in cdims.group(1).split(","):
+                                k *= lhs[1][int(d)]
+                    nout = 1
+                    for d in out[1]:
+                        nout *= d
+                    flops += 2.0 * nout * k
+            elif op == "convolution":
+                out = _parse_type(itype)
+                if out:
+                    nout = 1
+                    for d in out[1]:
+                        nout *= d
+                    km = re.search(r"dim_labels=\S+", line)
+                    # approximate: 2 * out * (kernel spatial * in_ch) -- we
+                    # recover in_ch*kh*kw from operand 1's definition
+                    ops_m = re.search(r"convolution\(([^)]*)\)", line)
+                    k = 1
+                    if ops_m:
+                        rhs_name = ops_m.group(1).split(",")[1].strip()
+                        rhs_name = rhs_name.split()[-1].lstrip("%")
+                        rhs = _parse_type(shapes.get(rhs_name, ""))
+                        if rhs:
+                            k = 1
+                            for d in rhs[1][:-1]:
+                                k *= d
+                    flops += 2.0 * nout * k
+            for kind in COLLECTIVE_OPS:
+                if op == kind or op.startswith(kind + "-"):
+                    b = _nbytes(itype)
+                    # XLA's *CPU* pipeline promotes bf16 reductions to f32
+                    # (to_apply=%add..._promo) and legalizes bf16 dots via
+                    # hoisted converts (operand = %convert_*_fusion) — on
+                    # TPU both run natively in bf16. Count such
+                    # collectives at the source dtype (0.5x).
+                    if "f32[" in itype:
+                        opnd = re.search(op + r"[\w\-]*\(%?([\w.\-]+)",
+                                         line)
+                        src_conv = bool(opnd) and \
+                            shapes.get(opnd.group(1)) is not None and \
+                            opnd.group(1).startswith("convert")
+                        if "promo" in line or src_conv:
+                            b = b // 2
+                    coll[kind] += b
+                    coll_n[kind] += 1
+                    break
+            if op == "while":
+                trip = 1
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    trip = int(tm.group(1))
+                cm = _CALL_RE.search(line)
+                if cm:
+                    calls.append((cm.group(1), trip, True))
+            elif op in ("fusion", "call", "custom-call", "reduce",
+                        "reduce-window", "scatter", "select-and-scatter",
+                        "map", "sort", "all-reduce"):
+                # fusion internals never hit HBM: count their flops and
+                # collectives but not their intermediate bytes (the fusion
+                # instruction's own output bytes are counted above).
+                count_bytes = op != "fusion"
+                for cm in _CALL_RE.finditer(line):
+                    calls.append((cm.group(1), 1, count_bytes))
+            elif op == "conditional":
+                bm = _COND_BRANCHES_RE.search(line)
+                if bm:
+                    for b in bm.group(1).split(","):
+                        calls.append((b.strip().lstrip("%"), 1, True))
+        return flops, bytes_, hbm, coll, coll_n, calls
+
+    def cost(self, name: Optional[str] = None):
+        name = name or self.entry
+        if name in self._memo:
+            return self._memo[name]
+        if name not in self.comps:
+            out = (0.0, 0.0, 0.0, {k: 0.0 for k in COLLECTIVE_OPS},
+                   {k: 0 for k in COLLECTIVE_OPS})
+            self._memo[name] = out
+            return out
+        self._memo[name] = (0.0, 0.0, 0.0,
+                            {k: 0.0 for k in COLLECTIVE_OPS},
+                            {k: 0 for k in COLLECTIVE_OPS})  # cycle guard
+        flops, bytes_, hbm, coll, coll_n, calls = self._local(name)
+        for callee, mult, count_bytes in calls:
+            cf, cb, ch, cc, cn = self.cost(callee)
+            flops += mult * cf
+            if count_bytes:
+                bytes_ += mult * cb
+                hbm += mult * ch
+            for k in COLLECTIVE_OPS:
+                coll[k] += mult * cc[k]
+                coll_n[k] += mult * cn[k]
+        self._memo[name] = (flops, bytes_, hbm, coll, coll_n)
+        return self._memo[name]
+
+
+def analyze_file(path: str) -> Dict:
+    with open(path) as f:
+        text = f.read()
+    hc = HloCost(text)
+    flops, bytes_, hbm, coll, coll_n = hc.cost()
+    return {"flops": flops, "bytes_upper": 2.0 * bytes_,  # every value rw
+            "hbm_bytes": hbm,  # fusion-realistic HBM traffic
+            "collective_bytes": coll, "collective_counts": coll_n}
+
+
+# ---------------------------------------------------------------------------
+# attribution: per-(op, shape, source) cost breakdown with trip multipliers
+# ---------------------------------------------------------------------------
+
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def attribution(path: str, kind: str = "collective", top: int = 12):
+    """Top contributors to a cost term, trip-multiplied.
+
+    kind='collective' -> (GB, 'op type shape', jax op_name tail)
+    kind='hbm'        -> same for the fusion-realistic memory model
+    """
+    with open(path) as f:
+        hc = HloCost(f.read())
+    mult = {hc.entry: 1.0}
+    order, seen, i = [hc.entry], {hc.entry}, 0
+    while i < len(order):
+        comp = order[i]
+        i += 1
+        _, _, _, _, _, calls = hc._local(comp)
+        for callee, m, _ in calls:
+            mult[callee] = mult.get(callee, 0.0) + mult[comp] * m
+            if callee not in seen:
+                seen.add(callee)
+                order.append(callee)
+    # fusion bodies' internals never hit HBM (mirrors cost()'s
+    # count_bytes=False): attribute only non-fusion computations.
+    fusion_callees = set()
+    for comp, lines in hc.comps.items():
+        for line in lines:
+            m = _parse_instr(line)
+            if m and m[2] == "fusion":
+                for cm in _CALL_RE.finditer(line):
+                    fusion_callees.add(cm.group(1))
+    out: Dict[str, float] = {}
+    mem_ops = {"dot", "convolution", "dynamic-slice", "dynamic-update-slice",
+               "gather", "scatter", "concatenate", "copy", "transpose",
+               "sort", "pad", "slice"}
+    for comp, lines in hc.comps.items():
+        if comp not in mult or comp in fusion_callees:
+            continue
+        shapes = {}
+        for line in lines:
+            m = _parse_instr(line)
+            if m:
+                shapes[m[0]] = m[1]
+        for line in lines:
+            m = _parse_instr(line)
+            if not m:
+                continue
+            _, itype, op = m
+            is_coll = any(op == k or op.startswith(k + "-")
+                          for k in COLLECTIVE_OPS)
+            if kind == "collective" and not is_coll:
+                continue
+            if kind == "hbm" and not (op in mem_ops or is_coll):
+                continue
+            b = _nbytes(itype)
+            if kind == "hbm" and op == "dot":
+                om = re.search(r"dot\(([^)]*)\)", line)
+                if om:
+                    for part in om.group(1).split(","):
+                        nm = part.strip().split()[-1].lstrip("%")
+                        t = shapes.get(nm)
+                        if t:
+                            b += _nbytes(t)
+            nm = _OPNAME_RE.search(line)
+            src = nm.group(1).split("/")[-1][:40] if nm else "?"
+            key = f"{op} {itype[:36]} <{src}>"
+            out[key] = out.get(key, 0.0) + b * mult[comp]
+    return sorted(out.items(), key=lambda kv: -kv[1])[:top]

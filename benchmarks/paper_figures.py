@@ -1,0 +1,210 @@
+"""Paper-table/figure benchmarks (one function per artifact).
+
+Each returns (rows, derived) where rows are CSV-able dicts and derived is
+the headline scalar(s) the paper claims for that artifact.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.sim import balance_sim as bs     # noqa: E402
+from repro.sim import decoder_sim as ds     # noqa: E402
+from repro.sim import perf_model as pm      # noqa: E402
+from repro.sim import resource_model as rm  # noqa: E402
+from repro.core.dual_engine import (AttentionWorkload,     # noqa: E402
+                                    EngineParallelism, pipeline_schedule)
+
+
+def fig11_sparsity():
+    """Layer-wise spike sparsity of the paper's workloads (Fig. 11).
+
+    Measured on smoke-scale models after a short training settle (CPU);
+    the paper's claim: high (>=75%) and stable natural sparsity."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.data import DataConfig, make_pipeline
+    from repro.launch.steps import build_train_step
+    from repro.models import registry
+    from repro.models.spikingformer import layer_sparsities
+    from repro.optim import adamw
+
+    rows = []
+    for arch in ("spikingformer-4-256", "cifarnet"):
+        cfg = get_config(arch, smoke=True)
+        params = registry.init(cfg, jax.random.PRNGKey(0))
+        state = registry.init_state(cfg)
+        opt = adamw(1e-3)
+        opt_state = opt.init(params)
+        data = make_pipeline(DataConfig(
+            kind="images", global_batch=8, img_size=cfg.vision.img_size,
+            num_classes=cfg.vocab_size))
+        step = jax.jit(build_train_step(cfg, opt))
+        s = jnp.asarray(0)
+        for i in range(10):
+            b = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+            params, opt_state, s, _, state = step(params, opt_state, s, b,
+                                                  state)
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(99).items()}
+        sps = layer_sparsities(params, cfg, batch, state)
+        for name, val in sps:
+            rows.append({"bench": "fig11", "network": arch, "layer": name,
+                         "sparsity": round(val, 4)})
+    mean_sp = float(np.mean([r["sparsity"] for r in rows]))
+    return rows, {"mean_sparsity": round(mean_sp, 3),
+                  "paper_claim": ">=0.75 (trained nets)"}
+
+
+def fig12_decoder():
+    out, best = ds.sweep_fig12(g_values=(2, 4, 8),
+                               p_ci_values=(4, 8, 16, 32, 64, 128),
+                               sparsity=0.75)
+    rows = [{"bench": "fig12", "G": g, "P_Ci": p, "F_norm": round(v, 4)}
+            for g, curve in out.items() for p, v in curve.items()]
+    return rows, {"optimal_P_Ci": best,
+                  "paper_claim": "P_Ci* = G/(1-s) = {2:8, 4:16, 8:32}"}
+
+
+def fig13_balance():
+    rows = []
+    for g, p_ci in ((4, 16), (8, 32)):
+        r = ds.sweep_fig13a(g, p_ci)
+        peak = max(r.values())
+        for pwo, v in r.items():
+            rows.append({"bench": "fig13a", "G": g, "P_Wo": pwo,
+                         "R_frac_of_peak": round(v / peak, 4)})
+    res1 = bs.compare(n_pes=16, n_banks=1, throughput=4)
+    ours, xbar = bs.scaling_curve()
+    for p in ours:
+        rows.append({"bench": "fig13c", "PEs": p,
+                     "ours_norm": round(ours[p], 4),
+                     "crossbar_norm": round(xbar[p], 4)})
+    derived = {
+        "bm1_speedup": round(res1.speedup, 2),
+        "ours_loss_128pe_pct": round(100 * (1 - ours[128]), 1),
+        "crossbar_loss_128pe_pct": round(100 * (1 - xbar[128]), 1),
+        "paper_claims": "3.48x; 13.17%; 70.68%",
+    }
+    return rows, derived
+
+
+def table4_comparison():
+    rows = []
+    for net, hw in (("cifarnet", rm.HardwareConfig(g=2)),
+                    ("spikingformer-4-256", rm.HardwareConfig(g=4)),
+                    ("spikingformer-8-512", rm.HardwareConfig(g=4))):
+        r = pm.evaluate(net, hw)
+        pub = {"cifarnet": "fireflyt_cifarnet",
+               "spikingformer-4-256": "fireflyt_sf4_256",
+               "spikingformer-8-512": "fireflyt_sf8_512"}[net]
+        paper = pm.PUBLISHED[pub]
+        rows.append({"bench": "table4", "network": net,
+                     "gops_model": round(r.gops, 0),
+                     "gops_paper": paper["gops"],
+                     "fps_model": round(r.fps, 0),
+                     "energy_eff_model": round(r.energy_eff, 1),
+                     "energy_eff_paper": paper["energy_eff"],
+                     "dsp_eff_model": round(r.dsp_eff, 2),
+                     "dsp_eff_paper": paper["dsp_eff"],
+                     "attention_hidden": round(r.hidden_attention_frac, 2)})
+    ratios = {k: round(v, 2) for k, v in pm.headline_ratios().items()}
+    ratios["paper_claims"] = "1.39x / 2.40x energy; 4.21x / 7.10x DSP"
+    return rows, ratios
+
+
+def table56_resources():
+    rows = []
+    for g in (2, 4):
+        hw = rm.HardwareConfig(g=g, p_wo=2)
+        br = rm.resource_breakdown(hw)
+        for comp, vals in br.items():
+            rows.append({"bench": "table5", "G": g, "component": comp,
+                         **{k: (round(v, 2) if isinstance(v, float) else v)
+                            for k, v in vals.items()}})
+        sv = rm.dsp_savings(hw)
+        rows.append({"bench": "table6", "G": g, **sv})
+    c = rm.and_popcount_comparison(18)
+    derived = {"fig9_depth": f"{c['naive_depth']}->{c['ours_depth']} "
+               "(paper 5->2)",
+               "fig9_lut_reduction": round(c["lut_reduction"], 3),
+               "paper_lut_reduction": 0.52,
+               "decoder_luts_G4_model_vs_paper":
+               f"{rm.decoder_luts(rm.HardwareConfig(g=4))} vs 1442"}
+    return rows, derived
+
+
+def fig5_pipeline():
+    w = AttentionWorkload(T_s=4, F_h=14, F_w=14, C_i=512, P_Co=64, heads=8)
+    p = EngineParallelism(P_Ts=2, P_Fx=4, P_Ci=16, P_Co=64,
+                          P_Bm=8, P_Bn=8, P_Bk=32)
+    se, be, overlapped, serial = pipeline_schedule(w, p)
+    rows = [{"bench": "fig5", "engine": "sparse", "op": n,
+             "start": round(s, 1), "end": round(e, 1)} for n, s, e in se[:6]]
+    rows += [{"bench": "fig5", "engine": "binary", "op": n,
+              "start": round(s, 1), "end": round(e, 1)} for n, s, e in be[:4]]
+    return rows, {"overlapped_cycles": overlapped, "serial_cycles": serial,
+                  "hiding_gain": round(serial / overlapped, 3)}
+
+
+def kernels_bench():
+    """Kernel wall times (CPU interpret mode = functional check only; the
+    derived column contrasts the MXU formulation vs the bit-packed
+    popcount port — the DESIGN.md §3 adaptation argument)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+
+    def timeit(fn, *args, n=3):
+        fn(*args)  # compile/warm
+        ts = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        return min(ts) * 1e6
+
+    key = jax.random.PRNGKey(0)
+    bh, l, d = 4, 128, 64
+    ks = jax.random.split(key, 3)
+    mk = lambda k: (jax.random.uniform(k, (bh, l, 1, d)) > 0.75
+                    ).astype(jnp.float32)
+    q, k_, v = mk(ks[0]), mk(ks[1]), mk(ks[2])
+    attn = jax.jit(lambda q, k, v: ops.spike_attention(
+        q, k, v, scale=0.125, delta=0.3, causal=False))
+    t_attn = timeit(attn, q, k_, v)
+    qs = q.reshape(bh, l, d)
+    ks_ = k_.reshape(bh, l, d)
+    pop = jax.jit(lambda a, b: ops.popcount_attention_scores(a, b))
+    t_pop = timeit(pop, qs, ks_)
+    from repro.models.nn import binary_flash_attention
+    jref = jax.jit(lambda q, k, v: binary_flash_attention(
+        q, k, v, delta=0.3, alpha=4.0, causal=False, q_chunk=64,
+        kv_chunk=64))
+    t_ref = timeit(jref, q, k_, v)
+    s = (jax.random.uniform(ks[0], (256, 256)) > 0.75).astype(jnp.float32)
+    w = jax.random.normal(ks[1], (256, 128))
+    mm = jax.jit(lambda s, w: ops.spike_matmul(s, w, block_m=128,
+                                               block_n=128, block_k=128))
+    t_mm = timeit(mm, s, w)
+    lif_in = jax.random.normal(ks[2], (4, 256, 512))
+    lf = jax.jit(lambda x: ops.lif(x, decay=0.5))
+    t_lif = timeit(lf, lif_in)
+    rows = [
+        {"bench": "kernels", "kernel": "spike_attention(interp)",
+         "us_per_call": round(t_attn, 1)},
+        {"bench": "kernels", "kernel": "popcount_scores(interp)",
+         "us_per_call": round(t_pop, 1)},
+        {"bench": "kernels", "kernel": "binary_flash_jnp",
+         "us_per_call": round(t_ref, 1)},
+        {"bench": "kernels", "kernel": "spike_matmul(interp)",
+         "us_per_call": round(t_mm, 1)},
+        {"bench": "kernels", "kernel": "lif(interp)",
+         "us_per_call": round(t_lif, 1)},
+    ]
+    return rows, {"note": "interpret-mode wall times (CPU container); "
+                  "MXU-vs-popcount contrast is structural, see DESIGN §3"}

@@ -1,0 +1,138 @@
+"""Roofline analysis per (arch x shape) on the single-pod mesh (§Roofline).
+
+Terms (per device, TPU v5e):
+  compute_s    = HLO_FLOPs / 197e12         (bf16 peak per chip)
+  memory_s     = HLO_bytes / 819e9          (HBM bandwidth)
+  collective_s = collective_bytes / 50e9    (ICI per link)
+
+HLO_FLOPs / bytes / collective_bytes come from the trip-count-aware HLO
+parser (hlo_cost.py) over the saved optimized modules — XLA's own
+cost_analysis() counts while bodies once and is reported alongside as a
+cross-check. MODEL_FLOPS is the analytic 6*N*D / 2*N*D (workload_model).
+
+Output: artifacts/roofline.json + a markdown table on stdout.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, "src")
+
+from hlo_cost import analyze_file  # noqa: E402
+from workload_model import model_flops  # noqa: E402
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES  # noqa: E402
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # B/s
+ICI_BW = 50e9           # B/s per link
+N_DEVICES = 256         # single-pod roofline mesh
+
+MOVE_DOWN = {
+    "compute": "raise MFU: larger per-device tiles (less DP, more batch "
+               "per chip), fuse elementwise chains, drop remat recompute "
+               "on cheap ops",
+    "memory": "cut HBM traffic: fuse producer->consumer chains (Pallas), "
+              "avoid materializing logits/attention intermediates, "
+              "bf16-ize fp32 temps",
+    "collective": "overlap/shrink collectives: reduce-scatter instead of "
+                  "all-reduce+slice, int8-compress DP grads, keep weights "
+                  "resident (less FSDP regather), bigger per-device batch",
+}
+
+
+def analyze_cell(arch: str, shape_name: str,
+                 art_dir: str = "artifacts/dryrun",
+                 mesh: str = "pod16x16") -> Optional[Dict]:
+    base = os.path.join(art_dir, f"{arch}__{shape_name}__{mesh}")
+    if not os.path.exists(base + ".json"):
+        return None
+    with open(base + ".json") as f:
+        rec = json.load(f)
+    if rec.get("status") != "ok":
+        return {"arch": arch, "shape": shape_name,
+                "status": rec.get("status")}
+    out = {"arch": arch, "shape": shape_name, "status": "ok",
+           "xla_cost_flops": rec.get("flops_total"),
+           "temp_bytes_per_dev": rec.get("temp_size_in_bytes"),
+           "arg_bytes_per_dev": rec.get("argument_size_in_bytes")}
+    if os.path.exists(base + ".hlo"):
+        hc = analyze_file(base + ".hlo")
+        flops = hc["flops"]
+        bytes_ = hc["hbm_bytes"]
+        coll = sum(hc["collective_bytes"].values())
+        out.update({
+            "hlo_flops": flops, "hlo_bytes": bytes_,
+            "hlo_bytes_upper": hc["bytes_upper"],
+            "collective_bytes": coll,
+            "collective_breakdown": hc["collective_bytes"],
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": bytes_ / HBM_BW,
+            "collective_s": coll / ICI_BW,
+        })
+        terms = {"compute": out["compute_s"], "memory": out["memory_s"],
+                 "collective": out["collective_s"]}
+        dom = max(terms, key=terms.get)
+        bound_s = terms[dom]
+        out["dominant"] = dom
+        out["step_time_lb_s"] = bound_s
+        mf = model_flops(arch, shape_name)
+        out["model_flops_per_dev"] = mf["model_flops_global"] / N_DEVICES
+        out["useful_ratio"] = out["model_flops_per_dev"] / max(flops, 1.0)
+        # roofline fraction: useful model flops per step over what the
+        # dominant-term-limited step time could have computed at peak
+        out["roofline_frac"] = out["model_flops_per_dev"] / \
+            (bound_s * PEAK_FLOPS)
+        out["mitigation"] = MOVE_DOWN[dom]
+    return out
+
+
+def full_table(art_dir: str = "artifacts/dryrun") -> List[Dict]:
+    rows = []
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPES:
+            r = analyze_cell(arch, shape, art_dir)
+            if r is not None:
+                rows.append(r)
+    return rows
+
+
+def render(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| MODEL/HLO | roofline_frac |\n|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['status']} | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = full_table()
+    os.makedirs("artifacts", exist_ok=True)
+    with open("artifacts/roofline.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    print(render(rows))
+    ok = [r for r in rows if r.get("status") == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_frac"])
+        coll_bound = [r for r in ok if r["dominant"] == "collective"]
+        print(f"\nworst roofline fraction: {worst['arch']} x "
+              f"{worst['shape']} ({worst['roofline_frac']:.3f})")
+        print(f"collective-bound cells: "
+              f"{[(r['arch'], r['shape']) for r in coll_bound]}")
+
+
+if __name__ == "__main__":
+    main()

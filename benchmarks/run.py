@@ -1,0 +1,67 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per bench plus the full row dumps,
+and (when dry-run artifacts exist) the roofline table.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, "src")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the model-training sparsity bench")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+
+    import paper_figures as pf
+
+    benches = [
+        ("fig12_decoder", pf.fig12_decoder),
+        ("fig13_balance", pf.fig13_balance),
+        ("table4_comparison", pf.table4_comparison),
+        ("table56_resources", pf.table56_resources),
+        ("fig5_pipeline", pf.fig5_pipeline),
+        ("kernels", pf.kernels_bench),
+    ]
+    if not args.fast:
+        benches.insert(0, ("fig11_sparsity", pf.fig11_sparsity))
+
+    print("name,us_per_call,derived")
+    all_rows = {}
+    for name, fn in benches:
+        t0 = time.perf_counter()
+        rows, derived = fn()
+        us = (time.perf_counter() - t0) * 1e6
+        all_rows[name] = {"rows": rows, "derived": derived}
+        print(f"{name},{us:.0f},\"{json.dumps(derived)}\"")
+    os.makedirs("artifacts", exist_ok=True)
+    with open("artifacts/bench_results.json", "w") as f:
+        json.dump(all_rows, f, indent=1, default=str)
+
+    print("\n== row dumps ==")
+    for name, blob in all_rows.items():
+        for row in blob["rows"]:
+            print(json.dumps(row))
+
+    if not args.skip_roofline and os.path.isdir("artifacts/dryrun"):
+        print("\n== roofline (single-pod, per device) ==")
+        import roofline
+        rows = roofline.full_table()
+        with open("artifacts/roofline.json", "w") as f:
+            json.dump(rows, f, indent=1)
+        print(roofline.render(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Analytic MODEL_FLOPS per (arch x shape): 6*N*D (dense train) /
+6*N_active*D (MoE train) / 2*N*D (inference), plus parameter censuses.
+
+Used by the roofline to compute the "useful compute" ratio
+MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy waste).
+"""
+from __future__ import annotations
+
+import sys
+from typing import Dict
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.launch.steps import abstract_params  # noqa: E402
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return "/".join(parts)
+
+
+def param_census(arch: str) -> Dict[str, float]:
+    """Total / embedding / expert / active parameter counts."""
+    cfg = get_config(arch)
+    tree = abstract_params(cfg)
+    total = embed = expert = 0.0
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        n = float(np.prod(leaf.shape))
+        p = _path_str(path)
+        total += n
+        if "embed/table" in p or "lm_head" in p or "pos_embed" in p:
+            embed += n
+        if "moe/up" in p or "moe/gate" in p or "moe/down" in p:
+            expert += n
+    active = total - expert
+    if cfg.moe is not None:
+        active += expert * cfg.moe.top_k / cfg.moe.num_experts
+    return {"total": total, "embed": embed, "expert": expert,
+            "active": active, "active_nonembed": active - embed}
+
+
+def model_flops(arch: str, shape_name: str) -> Dict[str, float]:
+    """Global analytic FLOPs for one step of this cell.
+
+    train:   6 * N_active * D   (fwd 2ND + bwd 4ND; N excludes the input
+             embedding gather but includes the lm_head matmul)
+    prefill: 2 * N_active * D
+    decode:  2 * N_active * B   (one token per sequence)
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    c = param_census(arch)
+    # lm_head participates in matmul flops; input embedding does not
+    n_eff = c["active"] - c["embed"] / 2.0
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        flops = 6.0 * n_eff * tokens
+    elif shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        flops = 2.0 * n_eff * tokens
+    else:
+        tokens = shape.global_batch
+        flops = 2.0 * n_eff * tokens
+        # decode attention: reads the KV cache, flops 2*L*d per head pair
+        if cfg.family in ("dense", "moe", "vlm", "encdec", "hybrid"):
+            if cfg.attn_type == "swa":
+                l_eff = min(shape.seq_len, cfg.window) * cfg.num_layers
+            elif cfg.attn_type == "local_global":
+                g = cfg.num_layers // cfg.global_every
+                l_eff = (g * (cfg.global_every - 1) *
+                         min(shape.seq_len, cfg.window) +
+                         g * shape.seq_len)
+            else:
+                l_eff = shape.seq_len * cfg.num_layers
+            flops += (shape.global_batch * 2 *
+                      2 * l_eff * cfg.num_heads * cfg.head_dim)
+    return {"model_flops_global": flops, "tokens": float(tokens), **c}

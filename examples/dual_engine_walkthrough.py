@@ -1,0 +1,74 @@
+"""Walkthrough of FireFly-T's mechanisms, end to end:
+
+1. the multi-lane sparse decoder on the paper's own Fig. 6 example;
+2. load balancing: unified wide bank vs crossbar;
+3. the latency-hiding pipeline (Eq. 3/4) sized for Spikingformer-8-512;
+4. the TPU kernels computing the same binary attention two ways
+   (MXU dot vs bit-packed AND-popcount) — bit-identical results.
+
+    PYTHONPATH=src python examples/dual_engine_walkthrough.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dual_engine import (AttentionWorkload, EngineParallelism,
+                                    pipeline_schedule,
+                                    required_binary_parallelism)
+from repro.core.sparsity import multilane_decode_full
+from repro.kernels import ops
+from repro.sim import balance_sim as bs
+
+
+def main():
+    print("== 1. multi-lane sparse decoder (paper Fig. 6A) ==")
+    bits = np.array([(0x9042 >> i) & 1 for i in range(16)])
+    for m in (1, 4):
+        cycles, n = multilane_decode_full(bits, m)
+        print(f"  bitmap 0x9042, M={m}: {n} cycle(s); "
+              f"indices per cycle: {[c.tolist() for c in cycles]}")
+
+    print("\n== 2. load balancing: unified wide bank vs crossbar ==")
+    res = bs.compare(n_pes=16, n_banks=4, throughput=4)
+    print(f"  16 PEs, 4 banks, G=4, 75% sparsity: crossbar "
+          f"{res.crossbar_cycles} cyc vs ours {res.unified_cycles} cyc "
+          f"({res.speedup:.2f}x)")
+
+    print("\n== 3. latency-hiding pipeline (Eq. 3/4) ==")
+    w = AttentionWorkload(T_s=4, F_h=14, F_w=14, C_i=512, P_Co=64, heads=8)
+    p = EngineParallelism(P_Ts=2, P_Fx=4, P_Ci=16, P_Co=64,
+                          P_Bm=8, P_Bn=8, P_Bk=32)
+    print(f"  Eq.4 required P_b ~= {required_binary_parallelism(w, p):.0f}, "
+          f"chosen P_b = {p.P_b}")
+    se, be, overlapped, serial = pipeline_schedule(w, p)
+    print(f"  serial {serial} cyc -> overlapped {overlapped} cyc "
+          f"({serial/overlapped:.2f}x hiding gain)")
+    for name, s, e in se[:4]:
+        print(f"    sparse  {name:4s} [{s:9.0f}, {e:9.0f})")
+    for name, s, e in be[:2]:
+        print(f"    binary  {name:8s} [{s:9.0f}, {e:9.0f})")
+
+    print("\n== 4. binary attention: MXU dot vs AND-popcount (bit-exact) ==")
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 2)
+    q = (jax.random.uniform(ks[0], (2, 64, 64)) > 0.75).astype(jnp.float32)
+    k = (jax.random.uniform(ks[1], (2, 64, 64)) > 0.75).astype(jnp.float32)
+    mxu_scores = jnp.einsum("bld,bmd->blm", q, k).astype(jnp.int32)
+    pop_scores = ops.popcount_attention_scores(q, k)
+    print(f"  MXU == popcount: "
+          f"{bool(jnp.array_equal(mxu_scores, pop_scores))} "
+          f"(max overlap count {int(pop_scores.max())})")
+    out = ops.spike_attention(q.reshape(2, 64, 1, 64),
+                              k.reshape(2, 64, 1, 64),
+                              k.reshape(2, 64, 1, 64),
+                              scale=1 / 8.0, delta=0.3, causal=False)
+    print(f"  fused spike_attention output shape {out.shape}, "
+          f"mean {float(out.mean()):.3f}")
+
+
+if __name__ == "__main__":
+    main()

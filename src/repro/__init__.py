@@ -1,0 +1,16 @@
+"""repro — FireFly-T reproduced as a multi-pod JAX training/serving framework.
+
+Subpackages:
+  core      — spiking dynamics, sparsity formats, binary attention, dual-engine model
+  models    — model zoo (10 assigned architectures + Spikingformer/CIFAR-Net)
+  kernels   — Pallas TPU kernels (spike attention, sparse spike matmul, LIF)
+  sim       — cycle-level hardware model reproducing the paper's experiments
+  data      — synthetic data pipelines
+  optim     — optimizers, schedules, gradient compression
+  checkpoint— sharded async checkpointing + elastic restore
+  runtime   — fault tolerance, straggler mitigation
+  parallel  — sharding rules
+  configs   — per-architecture configs + input shapes
+  launch    — mesh builders, dry-run driver, train/serve entry points
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,19 @@
+"""FireFly-T core: spiking dynamics, sparsity formats, binary attention,
+and the dual-engine latency-hiding pipeline model."""
+from .spiking import (SpikingConfig, spike, binarize, lif_scan, lif_step,
+                      lif_loop_reference, rate_encode, direct_encode,
+                      measure_sparsity)
+from .attention import binary_attention_scores, spiking_attention
+from .dual_engine import (EngineParallelism, AttentionWorkload,
+                          required_binary_parallelism, pipeline_schedule,
+                          pipeline_efficiency, complexity_reduction)
+from . import bitpack, sparsity
+
+__all__ = [
+    "SpikingConfig", "spike", "binarize", "lif_scan", "lif_step",
+    "lif_loop_reference", "rate_encode", "direct_encode", "measure_sparsity",
+    "binary_attention_scores", "spiking_attention",
+    "EngineParallelism", "AttentionWorkload", "required_binary_parallelism",
+    "pipeline_schedule", "pipeline_efficiency", "complexity_reduction",
+    "bitpack", "sparsity",
+]

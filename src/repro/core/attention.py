@@ -1,0 +1,66 @@
+"""Spiking self-attention (SSA) primitives.
+
+The binary engine's workload: given spiking ``Q, K, V`` in {0,1},
+
+    scores  = Q @ K^T                       (AND-PopCount == binary dot)
+    attn    = binarize(scores * scale, Δ_s) (binary attention, Shen et al.)
+    context = attn @ V
+    out     = SN(context)  or  binarize(context * scale2, Δ_o)
+
+No softmax — which is exactly why the whole thing fuses into a single-pass
+Pallas kernel with no running-max bookkeeping (see kernels/spike_attention).
+This module is the pure-jnp functional form used by models; the jit'd Pallas
+path is selected via ``use_kernel``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .spiking import SpikingConfig, binarize
+
+
+def binary_attention_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """Integer spike-overlap counts: (..., Lq, d) x (..., Lk, d) -> (..., Lq, Lk).
+
+    Operands are {0,1}-valued; the result equals AND-PopCount along d.
+    """
+    return jnp.einsum("...qd,...kd->...qk", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def spiking_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      cfg: SpikingConfig,
+                      delta_score: jax.Array | float = 0.0,
+                      scale: Optional[float] = None,
+                      use_kernel: bool = False) -> jax.Array:
+    """Binary spiking attention over the last two dims ``(L, d_head)``.
+
+    Args:
+      q, k, v: ``(..., L, d)`` spike tensors ({0,1} values, float dtype).
+      cfg: spiking config (binarize_scores toggles binary attention vs the
+        raw spiking attention of Spikformer/Spikingformer Eq. 2).
+      delta_score: learnable binarization threshold Δ for the scores.
+      scale: score scale; defaults to 1/sqrt(d) per Eq. 2.
+
+    Returns:
+      context ``(..., L, d)`` — binarized scores times V (membrane currents;
+      the caller applies the output spiking neuron / residual).
+    """
+    d = q.shape[-1]
+    scale = (1.0 / jnp.sqrt(d)) if scale is None else scale
+    if use_kernel:
+        from repro.kernels import ops as kops  # lazy: keeps core importable
+        return kops.spike_attention(
+            q, k, v, scale=float(scale),
+            delta=delta_score, binarize_scores=cfg.binarize_scores,
+            alpha=cfg.surrogate_alpha)
+    scores = binary_attention_scores(q, k) * scale
+    if cfg.binarize_scores:
+        attn = binarize(scores, delta_score, cfg.surrogate_alpha)
+    else:
+        attn = scores
+    return jnp.einsum("...qk,...kd->...qd", attn, v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)

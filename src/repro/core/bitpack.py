@@ -1,0 +1,53 @@
+"""Bit-packing utilities for binary spike tensors.
+
+FireFly-T's binary engine operates on 1-bit operands; on TPU the analogous
+storage optimization is packing spikes into ``uint32`` lanes so that a
+``P_Bk``-wide AND-PopCount becomes ``population_count(a & b)`` summed over
+words. These helpers implement the packing and a popcount-based binary
+matmul used by the ``popcount_attention`` kernel's reference path and by the
+property tests that pin the MXU kernel to the bit-exact semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD = 32
+_WEIGHTS = (jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32))
+
+
+def pack_bits(x: jax.Array) -> jax.Array:
+    """Pack binary values along the last axis into uint32 words.
+
+    ``(..., n)`` with n % 32 == 0  ->  ``(..., n // 32)`` uint32.
+    Bit ``j`` of word ``w`` is element ``w * 32 + j`` (little-endian bits).
+    """
+    n = x.shape[-1]
+    if n % WORD:
+        raise ValueError(f"last dim {n} not a multiple of {WORD}")
+    bits = (x != 0).astype(jnp.uint32).reshape(*x.shape[:-1], n // WORD, WORD)
+    return (bits * _WEIGHTS).sum(axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(p: jax.Array, n: int, dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`pack_bits`: ``(..., n//32)`` uint32 -> ``(..., n)``."""
+    if n != p.shape[-1] * WORD:
+        raise ValueError(f"n={n} inconsistent with packed shape {p.shape}")
+    bits = (p[..., None] >> jnp.arange(WORD, dtype=jnp.uint32)) & jnp.uint32(1)
+    return bits.reshape(*p.shape[:-1], n).astype(dtype)
+
+
+def popcount_matmul(a_packed: jax.Array, b_packed: jax.Array) -> jax.Array:
+    """Binary matmul via AND + population count on packed operands.
+
+    ``a_packed``: (..., M, W) uint32, ``b_packed``: (..., N, W) uint32
+    (both packed along the contraction dim). Returns (..., M, N) int32
+    counts — bit-exact equal to ``a @ b.T`` on the unpacked {0,1} arrays.
+    """
+    anded = a_packed[..., :, None, :] & b_packed[..., None, :, :]
+    return jax.lax.population_count(anded).sum(axis=-1).astype(jnp.int32)
+
+
+def popcount(x: jax.Array) -> jax.Array:
+    """Total number of set bits of a packed uint32 array."""
+    return jax.lax.population_count(x).sum(dtype=jnp.int32)

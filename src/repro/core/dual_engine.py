@@ -1,0 +1,131 @@
+"""Dual-engine latency-hiding pipeline model (paper Section III-C, Eq. 3/4).
+
+FireFly-T overlaps the sparse engine (Q/K/V projections) with the binary
+engine (QK^T, QK^T V) across attention heads. This module is the analytic +
+discrete-event model of that schedule; it is used by:
+
+* ``repro.sim.perf_model``    — Table IV throughput/energy reproduction,
+* ``benchmarks/fig5_pipeline``— the spatial-temporal overlap diagram,
+* the engine-sizing rule Eq. 4 used to pick ``P_B*`` for a network.
+
+On TPU the same overlap re-appears as HBM-prefetch ∥ MXU pipelining inside
+the fused attention kernel and as compute/collective overlap at the
+distribution layer (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineParallelism:
+    """Hardware parallelism knobs (Table II)."""
+    P_Ts: int = 2
+    P_Fx: int = 4
+    P_Ci: int = 16
+    P_Co: int = 64
+    # binary engine systolic array + inner-product width
+    P_Bm: int = 4
+    P_Bn: int = 4
+    P_Bk: int = 32
+
+    @property
+    def P_s(self) -> int:
+        return self.P_Ts * self.P_Fx * self.P_Ci * self.P_Co
+
+    @property
+    def P_b(self) -> int:
+        return self.P_Bm * self.P_Bn * self.P_Bk
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionWorkload:
+    """Per-head attention workload (Eq. 3)."""
+    T_s: int
+    F_h: int
+    F_w: int
+    C_i: int          # embedding dim d
+    P_Co: int         # output-channel tile == per-head dim in the schedule
+    heads: int = 8
+
+    @property
+    def L(self) -> int:
+        return self.F_h * self.F_w
+
+    def W_s(self) -> int:
+        """Sparse-engine work per head per projection (MACs)."""
+        return self.T_s * self.L * self.C_i * self.P_Co
+
+    def W_b(self) -> int:
+        """Binary-engine work per head per attention matmul (MACs)."""
+        return self.T_s * self.L * self.L * self.P_Co
+
+
+def required_binary_parallelism(w: AttentionWorkload, p: EngineParallelism) -> float:
+    """Eq. 4: P_b ~= 2/3 * (Fh*Fw / Ci) * P_s for balanced overlap."""
+    return 2.0 / 3.0 * (w.L / w.C_i) * p.P_s
+
+
+def pipeline_schedule(w: AttentionWorkload, p: EngineParallelism,
+                      sparsity: float = 0.0
+                      ) -> Tuple[List[tuple], List[tuple], int, int]:
+    """Discrete-event schedule of the latency-hiding pipeline (Fig. 5).
+
+    The sparse engine serially computes Q_h, K_h, V_h per head (each taking
+    ``W_s/P_s_eff`` cycles, where effective throughput scales with input
+    density when sparsity skipping is on); the binary engine computes
+    ``QK^T_h`` once Q_h,K_h are done and ``QK^T V_h`` once V_h is done.
+
+    Returns (sparse_events, binary_events, total_overlapped, total_serial);
+    events are (name, start, end) in cycles.
+    """
+    ts = w.W_s() / (p.P_s / max(1e-9, 1.0 - sparsity))  # sparse op latency
+    tb = w.W_b() / p.P_b                                # binary op latency
+
+    sparse_events, binary_events = [], []
+    t_sparse = 0.0
+    qk_done = {}
+    v_done = {}
+    for h in range(w.heads):
+        for name in ("Q", "K", "V"):
+            sparse_events.append((f"{name}{h}", t_sparse, t_sparse + ts))
+            t_sparse += ts
+            if name == "K":
+                qk_done[h] = t_sparse
+            if name == "V":
+                v_done[h] = t_sparse
+    t_bin = 0.0
+    for h in range(w.heads):
+        start = max(t_bin, qk_done[h])
+        binary_events.append((f"QK^T {h}", start, start + tb))
+        t_bin = start + tb
+        start = max(t_bin, v_done[h])
+        binary_events.append((f"QK^TV {h}", start, start + tb))
+        t_bin = start + tb
+
+    total_overlapped = max(t_sparse, t_bin if binary_events else 0.0)
+    total_serial = t_sparse + 2 * tb * w.heads
+    return sparse_events, binary_events, math.ceil(total_overlapped), math.ceil(total_serial)
+
+
+def pipeline_efficiency(w: AttentionWorkload, p: EngineParallelism,
+                        sparsity: float = 0.0) -> float:
+    """Fraction of attention latency hidden: 1 -> perfect (O(3TsLd^2))."""
+    _, _, overlapped, serial = pipeline_schedule(w, p, sparsity)
+    ideal = 3 * w.heads * (w.W_s() / (p.P_s / max(1e-9, 1.0 - sparsity)))
+    if overlapped <= 0:
+        return 1.0
+    return min(1.0, ideal / overlapped)
+
+
+def complexity_reduction(w: AttentionWorkload) -> Tuple[int, int]:
+    """(serial, overlapped) op counts: O(3TsLd^2 + 2TsL^2 d) -> O(3TsLd^2).
+
+    Uses d == heads * P_Co as the full embedding dim.
+    """
+    d = w.C_i
+    serial = 3 * w.T_s * w.L * d * d + 2 * w.T_s * w.L * w.L * d
+    overlapped = 3 * w.T_s * w.L * d * d
+    return serial, overlapped

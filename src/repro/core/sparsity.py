@@ -1,0 +1,138 @@
+"""Bitmap sparsity format + the multi-lane sparse decoder functional model.
+
+This is the bit-exact software model of FireFly-T's sparse decoder (paper
+Section IV-A1, Eq. 5). The decoder consumes a ``P_Ci``-bit bitmap of spike
+activity and extracts up to ``M`` non-zero indices per cycle using carry-
+lookahead style propagate/generate logic:
+
+    g_n^m     = i_n  AND  c_n^{m-1}
+    o_n^m     = g_n^m AND NOT c_n^m
+    c_{n+1}^m = g_n^m OR  c_n^m          (p_n^m == 1 always)
+
+with ``c_n^{-1} = 1`` and ``c_0^m = 0``. Lane ``m`` fires a one-hot at the
+position of the (m+1)-th set bit. After a decode cycle the bitmap is updated
+to clear the extracted bits; the paper typesets this as
+``i_n ∧ c_{n+1}^{M-1}`` — by the lane semantics the bit that must survive is
+one with *at least M set bits strictly before it*, i.e. ``i_n ∧ c_n^{M-1}``
+(the union of all lane one-hots is exactly ``i_n ∧ ¬c_n^{M-1}``); we
+implement that semantics and pin it with property tests
+(every set bit is extracted exactly once, in order, M per cycle).
+
+On TPU this fine-grained index extraction is *not* the production path (see
+DESIGN.md §3) — it feeds the cycle-level simulator in ``repro.sim`` that
+reproduces the paper's Figs. 12/13, and the block-occupancy reduction used by
+the ``spike_matmul`` kernel is its MXU-granularity adaptation.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Bit-exact Eq. 5 model
+# ---------------------------------------------------------------------------
+
+
+def multilane_decode_cycle(bits: np.ndarray, m_lanes: int):
+    """One decode cycle of the M-lane decoder on a single bitmap.
+
+    Args:
+      bits: ``(..., N)`` {0,1} int/bool array — the current bitmap(s).
+      m_lanes: number of decoder lanes M.
+
+    Returns:
+      (onehots ``(..., M, N)`` bool — per-lane one-hot outputs,
+       remaining ``(..., N)`` bool — bitmap with extracted bits cleared).
+    """
+    bits = np.asarray(bits).astype(bool)
+    n = bits.shape[-1]
+    # c[m][n] = lane m has fired strictly before position n
+    # (vectorized over leading dims; serial over n like the hardware chain).
+    c_prev = np.ones(bits.shape[:-1] + (n + 1,), dtype=bool)  # lane -1
+    onehots = np.zeros(bits.shape[:-1] + (m_lanes, n), dtype=bool)
+    for m in range(m_lanes):
+        c = np.zeros_like(c_prev)
+        for pos in range(n):
+            g = bits[..., pos] & c_prev[..., pos]
+            onehots[..., m, pos] = g & ~c[..., pos]
+            c[..., pos + 1] = g | c[..., pos]
+        c_prev = c
+    remaining = bits & c_prev[..., :-1]  # keep bits with >= M set bits before
+    return onehots, remaining
+
+
+def multilane_decode_full(bits: np.ndarray, m_lanes: int):
+    """Run decode cycles until the bitmap is exhausted.
+
+    Returns (list of per-cycle index arrays, n_cycles). Indices within a
+    cycle are sorted ascending (lane order). A zero bitmap takes 1 cycle
+    (load-and-skip), matching the input-tracker behaviour.
+    """
+    bits = np.asarray(bits).astype(bool).copy()
+    assert bits.ndim == 1
+    cycles: List[np.ndarray] = []
+    if not bits.any():
+        return [np.array([], dtype=np.int64)], 1
+    while bits.any():
+        onehots, bits = multilane_decode_cycle(bits, m_lanes)
+        idx = np.nonzero(onehots.any(axis=0))[0]
+        cycles.append(idx)
+    return cycles, len(cycles)
+
+
+def naive_first_m_indices(bits: np.ndarray, m_lanes: int) -> np.ndarray:
+    """Oracle: indices of the first min(M, popcount) set bits."""
+    idx = np.nonzero(np.asarray(bits).astype(bool))[0]
+    return idx[:m_lanes]
+
+
+def decode_cycles_for_word(popcount: int, m_lanes: int) -> int:
+    """Cycles to decode one bitmap word given the input tracker policy.
+
+    The tracker is initialized with the word's popcount and decremented by M
+    per cycle; a new word may load once the tracker is <= M, so a word
+    occupies ``max(1, ceil(popcount / M))`` decoder cycles.
+    """
+    return max(1, -(-popcount // m_lanes))
+
+
+# ---------------------------------------------------------------------------
+# Bitmap tensor format (software CSR/bitmap hybrid used by the simulator)
+# ---------------------------------------------------------------------------
+
+
+def bitmap_encode(spikes: np.ndarray, word: int = 32):
+    """Encode a binary activation tensor into (words, popcounts).
+
+    ``spikes``: (..., C) with C % word == 0. Returns ``words`` (..., C//word)
+    uint64 bit words and ``pc`` per-word popcounts (int32).
+    """
+    spikes = np.asarray(spikes)
+    c = spikes.shape[-1]
+    if c % word:
+        raise ValueError(f"channel dim {c} not a multiple of {word}")
+    bits = (spikes != 0).reshape(*spikes.shape[:-1], c // word, word)
+    weights = (1 << np.arange(word, dtype=np.uint64))
+    words = (bits.astype(np.uint64) * weights).sum(axis=-1)
+    pc = bits.sum(axis=-1).astype(np.int32)
+    return words, pc
+
+
+def bitmap_decode(words: np.ndarray, c: int, word: int = 32) -> np.ndarray:
+    """Inverse of :func:`bitmap_encode` -> float32 {0,1} tensor (..., C)."""
+    words = np.asarray(words, dtype=np.uint64)
+    bits = (words[..., None] >> np.arange(word, dtype=np.uint64)) & np.uint64(1)
+    return bits.reshape(*words.shape[:-1], c).astype(np.float32)
+
+
+def block_occupancy(spikes: np.ndarray, block: int) -> np.ndarray:
+    """Per-block any-nonzero mask along the last dim — the MXU-granularity
+    adaptation of the sparse decoder (see spike_matmul kernel)."""
+    c = spikes.shape[-1]
+    pad = (-c) % block
+    if pad:
+        spikes = np.concatenate(
+            [spikes, np.zeros((*spikes.shape[:-1], pad), spikes.dtype)], -1)
+    blocks = spikes.reshape(*spikes.shape[:-1], -1, block)
+    return (blocks != 0).any(axis=-1)

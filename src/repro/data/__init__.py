@@ -1,0 +1,2 @@
+from .pipeline import (DataConfig, SyntheticImages, SyntheticLM,
+                       make_pipeline)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for FireFly-T's two compute hot-spots:
+
+  spike_attention    — fused binary attention (binary engine, MXU form)
+  spike_matmul       — block-sparse spike x weight matmul (sparse engine)
+  lif                — fused LIF membrane scan (neuronal dynamics module)
+  popcount_attention — bit-packed AND-PopCount scores (faithful FPGA port,
+                       kept for comparison; the MXU form wins on TPU)
+
+Each kernel: pl.pallas_call + explicit BlockSpec VMEM tiling; ``ops.py``
+jit'd wrappers; ``ref.py`` pure-jnp oracles (tests sweep shapes/dtypes).
+"""
+from . import ops, ref

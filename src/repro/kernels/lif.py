@@ -1,0 +1,62 @@
+"""Fused LIF membrane update over T_s time steps.
+
+FireFly-T pipelines membrane accumulation across output channels so the
+neuronal-dynamics module shrinks to a (P_Fx x P_Ts) grid. The TPU analogue:
+keep the membrane in a VMEM scratch across the in-kernel time loop so HBM
+sees the input currents once and the output spikes once (instead of T
+round-trips through a lax.scan over whole tensors). VPU-bound, fuses the
+decay/threshold/reset chain.
+
+Layout: currents (T, M, D) -> spikes (T, M, D); grid (nM, nD); the kernel
+holds a (block_m, block_d) fp32 membrane in VMEM scratch and unrolls T.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(i_ref, o_ref, u_scratch, *, t_steps: int, decay: float,
+            v_th: float, soft_reset: bool):
+    u_scratch[...] = jnp.zeros_like(u_scratch)
+    for t in range(t_steps):
+        u = decay * u_scratch[...] + i_ref[t].astype(jnp.float32)
+        s = (u >= v_th).astype(jnp.float32)
+        if soft_reset:
+            u = u - s * v_th
+        else:
+            u = u * (1.0 - s)
+        u_scratch[...] = u
+        o_ref[t] = s.astype(o_ref.dtype)
+
+
+def lif_forward(currents: jax.Array, *, decay: float, v_th: float = 1.0,
+                soft_reset: bool = False,
+                block_m: int = 256, block_d: int = 512,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """currents: (T, M, D) -> spikes (T, M, D) (same dtype)."""
+    t, m, d = currents.shape
+    block_m = min(block_m, m)
+    block_d = min(block_d, d)
+    assert m % block_m == 0 and d % block_d == 0, (m, d, block_m, block_d)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    grid = (m // block_m, d // block_d)
+    return pl.pallas_call(
+        functools.partial(_kernel, t_steps=t, decay=decay, v_th=v_th,
+                          soft_reset=soft_reset),
+        grid=grid,
+        in_specs=[pl.BlockSpec((t, block_m, block_d),
+                               lambda mi, di: (0, mi, di))],
+        out_specs=pl.BlockSpec((t, block_m, block_d),
+                               lambda mi, di: (0, mi, di)),
+        out_shape=jax.ShapeDtypeStruct((t, m, d), currents.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_d), jnp.float32)],
+        interpret=interpret,
+    )(currents)

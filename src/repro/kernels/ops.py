@@ -1,0 +1,114 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``spike_attention`` carries a custom VJP: the forward runs the fused Pallas
+kernel; the backward recomputes through the pure-jnp oracle with surrogate
+gradients (standard recompute-in-bwd pattern — the L x L attention matrix
+still never persists between fwd and bwd).
+
+On non-TPU backends kernels run in ``interpret=True`` mode (bit-exact
+Python execution of the kernel body) — that is how this CPU container
+validates them; on TPU the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitpack import pack_bits
+from repro.core.spiking import binarize
+from . import ref
+from .lif import lif_forward as _lif_pallas
+from .popcount_attention import popcount_scores as _popcount_pallas
+from .spike_attention import spike_attention as _attn_pallas
+from .spike_matmul import spike_matmul as _matmul_pallas
+
+
+# ---------------------------------------------------------------------------
+# spike attention (fwd: Pallas, bwd: surrogate-gradient recompute)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def _spike_attention(q, k, v, delta, alpha, scale, causal, binarize_scores):
+    b, l, h, d = q.shape  # (B', L, H, D) model layout
+    fold = lambda u: u.transpose(0, 2, 1, 3).reshape(b * h, l, d)
+    out = _attn_pallas(fold(q), fold(k), fold(v), scale=scale, delta=delta,
+                       causal=causal, binarize_scores=binarize_scores)
+    return out.reshape(b, h, l, d).transpose(0, 2, 1, 3)
+
+
+def _surrogate_fwd(q, k, v, delta, alpha, scale, causal, binarize_scores):
+    out = _spike_attention(q, k, v, delta, alpha, scale, causal,
+                           binarize_scores)
+    return out, (q, k, v, delta, alpha)
+
+
+def _jnp_attention(q, k, v, delta, alpha, scale, causal, binarize_scores):
+    s = jnp.einsum("blhd,bmhd->bhlm", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    a = binarize(s, delta, alpha) if binarize_scores else s
+    if causal:
+        l = q.shape[1]
+        mask = jnp.tril(jnp.ones((l, l), bool))
+        a = jnp.where(mask[None, None], a, 0.0)
+    out = jnp.einsum("bhlm,bmhd->blhd", a, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def _surrogate_bwd(scale, causal, binarize_scores, res, g):
+    q, k, v, delta, alpha = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_, d_: _jnp_attention(q_, k_, v_, d_, alpha, scale,
+                                              causal, binarize_scores),
+        q, k, v, delta)
+    dq, dk, dv, dd = vjp(g)
+    return dq, dk, dv, dd, None
+
+
+_spike_attention.defvjp(_surrogate_fwd, _surrogate_bwd)
+
+
+def spike_attention(q, k, v, *, scale: float, delta, alpha: float = 4.0,
+                    causal: bool = False, binarize_scores: bool = True):
+    """Model-layout fused binary attention: q/k/v (B', L, H, D)."""
+    delta = jnp.asarray(delta, jnp.float32)
+    return _spike_attention(q, k, v, delta, alpha, scale, causal,
+                            binarize_scores)
+
+
+# ---------------------------------------------------------------------------
+# sparse spike matmul
+# ---------------------------------------------------------------------------
+
+def spike_matmul(s, w, *, block_m: int = 128, block_n: int = 128,
+                 block_k: int = 128):
+    """y = s @ w with zero-block skipping. s: (M, K) spikes, w: (K, N)."""
+    return _matmul_pallas(s, w, block_m=block_m, block_n=block_n,
+                          block_k=block_k)
+
+
+# ---------------------------------------------------------------------------
+# LIF
+# ---------------------------------------------------------------------------
+
+def lif(currents, *, decay: float, v_th: float = 1.0,
+        soft_reset: bool = False):
+    """Fused LIF over (T, ..., D): folds middle dims into M."""
+    t = currents.shape[0]
+    d = currents.shape[-1]
+    flat = currents.reshape(t, -1, d)
+    out = _lif_pallas(flat, decay=decay, v_th=v_th, soft_reset=soft_reset,
+                      block_m=min(256, flat.shape[1]),
+                      block_d=min(512, d))
+    return out.reshape(currents.shape)
+
+
+# ---------------------------------------------------------------------------
+# bit-packed popcount scores
+# ---------------------------------------------------------------------------
+
+def popcount_attention_scores(q_spikes, k_spikes):
+    """q/k (BH, L, D) {0,1} -> int32 (BH, Lq, Lk) via pack + AND-popcount."""
+    return _popcount_pallas(pack_bits(q_spikes), pack_bits(k_spikes))

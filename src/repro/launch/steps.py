@@ -1,0 +1,162 @@
+"""Step builders: train_step / prefill_step / serve_step per architecture,
+plus ``input_specs`` (ShapeDtypeStruct stand-ins for every model input —
+weak-type-correct, shardable, no device allocation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunShape
+from repro.models import registry
+from repro.optim import Optimizer
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ModelConfig, shape: RunShape) -> Dict[str, Any]:
+    """Abstract batch for forward/train at this run shape."""
+    b = shape.global_batch
+    s = shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "vlm":
+        n_patch = cfg.frontend.num_embeds
+        return {"tokens": _sds((b, s - n_patch), jnp.int32),
+                "patch_embeds": _sds((b, n_patch, cfg.frontend.embed_dim),
+                                     dt)}
+    if cfg.family == "encdec":
+        return {"tokens": _sds((b, s), jnp.int32),
+                "audio_embeds": _sds((b, cfg.encoder_seq, cfg.d_model), dt)}
+    if cfg.family in ("spikingformer", "cifarnet"):
+        v = cfg.vision
+        return {"images": _sds((b, v.img_size, v.img_size, v.in_channels),
+                               dt),
+                "labels": _sds((b,), jnp.int32)}
+    return {"tokens": _sds((b, s), jnp.int32)}
+
+
+def cache_struct(cfg: ModelConfig, shape: RunShape):
+    """Abstract decode cache (eval_shape over init_cache — no allocation)."""
+    fn = functools.partial(registry.init_cache, cfg, shape.global_batch,
+                           shape.seq_len)
+    return jax.eval_shape(fn)
+
+
+def decode_inputs_struct(cfg: ModelConfig, shape: RunShape):
+    tokens = _sds((shape.global_batch, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    return cache_struct(cfg, shape), tokens, pos
+
+
+def abstract_params(cfg: ModelConfig, seed: int = 0):
+    return jax.eval_shape(lambda: registry.init(cfg, jax.random.PRNGKey(seed)))
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def loss_from_forward(cfg: ModelConfig, logits, batch) -> jax.Array:
+    if cfg.family in ("spikingformer", "cifarnet"):
+        return softmax_xent(logits, batch["labels"])
+    tokens = batch["tokens"]
+    if cfg.family == "vlm":
+        n_patch = cfg.frontend.num_embeds
+        preds = logits[:, n_patch - 1:-1]
+        return softmax_xent(preds, tokens)
+    return softmax_xent(logits[:, :-1], tokens[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, optimizer: Optimizer,
+                     compress: bool = False) -> Callable:
+    """(params, opt_state, step, batch[, model_state]) ->
+    (params, opt_state, step+1, metrics[, model_state])."""
+    stateful = cfg.family in ("spikingformer", "cifarnet")
+
+    if stateful:
+        def train_step(params, opt_state, step, batch, model_state):
+            def loss_fn(p):
+                logits, aux = registry.forward(p, cfg, batch, train=True,
+                                               state=model_state)
+                return loss_from_forward(cfg, logits, batch), aux
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params)
+            new_params, new_opt = optimizer.update(grads, opt_state, params,
+                                                   step)
+            metrics = {"loss": loss, "grad_norm": new_opt["grad_norm"],
+                       "fire_rate": aux.get("fire_rate", jnp.zeros(()))}
+            return new_params, new_opt, step + 1, metrics, aux["state"]
+        return train_step
+
+    def train_step(params, opt_state, step, batch):
+        def loss_fn(p):
+            logits, aux = registry.forward(p, cfg, batch, train=True)
+            loss = loss_from_forward(cfg, logits, batch)
+            if "moe_aux" in aux:
+                loss = loss + aux["moe_aux"]
+            return loss, aux
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        if compress:
+            from repro.optim import compressed_gradients
+            err = opt_state.get("compress_err")
+            grads, new_err = compressed_gradients(grads, err)
+        new_params, new_opt = optimizer.update(grads, opt_state, params, step)
+        if compress:
+            new_opt["compress_err"] = new_err
+        metrics = {"loss": loss, "grad_norm": new_opt["grad_norm"]}
+        if "moe_aux" in aux:
+            metrics["moe_aux"] = aux["moe_aux"]
+        return new_params, new_opt, step + 1, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig) -> Callable:
+    """Inference forward over the full sequence (logits only; the KV cache
+    materialization for chunked prefill->decode handoff is exercised by
+    serve.py at host scale)."""
+    def prefill_step(params, batch):
+        logits, _ = registry.forward(params, cfg, batch, train=False)
+        return logits
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig) -> Callable:
+    """One decode step: (params, cache, tokens (B,1), pos) ->
+    (next_token_logits, new_cache)."""
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = registry.decode_step(params, cfg, cache, tokens,
+                                                 pos)
+        return logits, new_cache
+    return serve_step
+
+
+def step_for_shape(cfg: ModelConfig, shape: RunShape,
+                   optimizer: Optional[Optimizer] = None) -> Callable:
+    if shape.mode == "train":
+        assert optimizer is not None
+        return build_train_step(cfg, optimizer)
+    if shape.mode == "prefill":
+        return build_prefill_step(cfg)
+    return build_serve_step(cfg)

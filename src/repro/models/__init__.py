@@ -1,0 +1,3 @@
+from . import registry
+from .registry import (FAMILIES, NO_DECODE, NO_LONG_CONTEXT, decode_step,
+                       forward, has_decode, init, init_cache, init_state)

@@ -1,0 +1,401 @@
+"""Mixture-of-Experts decoder LM (deepseek-moe-16b, kimi-k2-1t-a32b).
+
+Expert parallelism strategy (DESIGN.md §6): tokens are batch-sharded over
+('pod','data') and *replicated* over 'model'; experts are sharded over
+'model'. Each model-shard computes its local experts' contribution for all
+of its tokens via **sort-based capacity dispatch** (argsort by expert id →
+capacity-bounded gather → batched expert matmul → scatter-add), then a
+psum over 'model' combines contributions. No all-to-all, no one-hot
+dispatch matmuls (which are FLOP-hostile at 384 experts).
+
+Dispatch runs inside ``shard_map`` when a mesh context is installed
+(launch layer), and falls back to the identical single-shard code path
+otherwise (unit tests).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core.spiking import lif_scan
+from repro.parallel.sharding import constrain, get_rules
+from . import nn
+from .transformer import _project_qkv, _attend_full_seq, _spike
+
+try:  # jax >= 0.4.35
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+# ---------------------------------------------------------------------------
+# Mesh context for EP (installed by the launch layer)
+# ---------------------------------------------------------------------------
+
+import threading
+
+_ctx = threading.local()
+
+
+def set_ep_mesh(mesh, token_axes=("pod", "data"), expert_axis="model"):
+    _ctx.mesh = mesh
+    _ctx.token_axes = token_axes
+    _ctx.expert_axis = expert_axis
+
+
+def clear_ep_mesh():
+    _ctx.mesh = None
+
+
+def get_ep_mesh():
+    return getattr(_ctx, "mesh", None), \
+        getattr(_ctx, "token_axes", ("pod", "data")), \
+        getattr(_ctx, "expert_axis", "model")
+
+
+class use_ep_mesh:
+    def __init__(self, mesh, token_axes=("pod", "data"), expert_axis="model"):
+        self.args = (mesh, token_axes, expert_axis)
+
+    def __enter__(self):
+        self.prev = get_ep_mesh()
+        set_ep_mesh(*self.args)
+
+    def __exit__(self, *exc):
+        set_ep_mesh(*self.prev)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _moe_ffn_init(key, cfg: ModelConfig):
+    m = cfg.moe
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    e, d, f = m.num_experts, cfg.d_model, m.d_ff_expert
+    std = 1.0 / math.sqrt(d)
+    p = {
+        "router": nn.normal(ks[0], (d, e), std, jnp.float32),
+        "up": nn.normal(ks[1], (e, d, f), std, dt),
+        "gate": nn.normal(ks[2], (e, d, f), std, dt),
+        "down": nn.normal(ks[3], (e, f, d), 1.0 / math.sqrt(f), dt),
+    }
+    if m.num_shared:
+        p["shared"] = nn.mlp_init(ks[4], d, m.num_shared * f, gated=True,
+                                  dtype=dt)
+    return p
+
+
+def _attn_init(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": nn.rmsnorm_init(cfg.d_model, dt),
+        "wq": nn.linear_init(ks[0], cfg.d_model, cfg.q_dim, dtype=dt),
+        "wk": nn.linear_init(ks[1], cfg.d_model, cfg.kv_dim, dtype=dt),
+        "wv": nn.linear_init(ks[2], cfg.d_model, cfg.kv_dim, dtype=dt),
+        "wo": nn.linear_init(ks[3], cfg.q_dim, cfg.d_model,
+                             std=1.0 / math.sqrt(cfg.q_dim * 2 * cfg.num_layers),
+                             dtype=dt),
+        "ln2": nn.rmsnorm_init(cfg.d_model, dt),
+    }
+    if cfg.spiking is not None:
+        p["delta"] = jnp.asarray(cfg.spiking.attn_threshold_init, jnp.float32)
+    return p
+
+
+def _moe_layer_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    p = _attn_init(k1, cfg)
+    p["moe"] = _moe_ffn_init(k2, cfg)
+    return p
+
+
+def _dense_layer_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    p = _attn_init(k1, cfg)
+    p["mlp"] = nn.mlp_init(k2, cfg.d_model, cfg.moe.first_dense_ff or cfg.d_ff,
+                           gated=True, dtype=jnp.dtype(cfg.dtype))
+    return p
+
+
+def init(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    m = cfg.moe
+    k_embed, k_dense, k_moe, k_head = jax.random.split(key, 4)
+    params: Dict[str, Any] = {
+        "embed": nn.embedding_init(k_embed, cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": nn.rmsnorm_init(cfg.d_model, dt),
+        "lm_head": nn.linear_init(k_head, cfg.d_model, cfg.vocab_size, dtype=dt),
+    }
+    if m.first_k_dense:
+        keys = jax.random.split(k_dense, m.first_k_dense)
+        params["dense_layers"] = jax.vmap(
+            lambda k: _dense_layer_init(k, cfg))(keys)
+    n_moe = cfg.num_layers - m.first_k_dense
+    keys = jax.random.split(k_moe, n_moe)
+    params["layers"] = jax.vmap(lambda k: _moe_layer_init(k, cfg))(keys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# routing + dispatch
+# ---------------------------------------------------------------------------
+
+
+def router_topk(x2d: jax.Array, router_w: jax.Array, m: MoEConfig):
+    """x2d: (T, D) -> (weights (T, K), idx (T, K), aux losses)."""
+    logits = jnp.dot(x2d.astype(jnp.float32), router_w)      # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, m.top_k)
+    if m.normalize_topk:
+        w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load balance loss + router z-loss
+    me = probs.mean(axis=0)                                   # (E,)
+    assign = jnp.zeros_like(probs).at[
+        jnp.arange(x2d.shape[0])[:, None], idx].set(1.0).mean(axis=0)
+    aux_lb = m.num_experts * jnp.sum(me * assign)
+    aux_z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return w.astype(jnp.float32), idx, aux_lb, aux_z
+
+
+def _local_expert_ffn(xg: jax.Array, up, gate, down, act) -> jax.Array:
+    """xg: (E_loc, C, D) -> (E_loc, C, D); batched expert matmuls (MXU)."""
+    h = jnp.einsum("ecd,edf->ecf", xg, up,
+                   preferred_element_type=xg.dtype)
+    g = jnp.einsum("ecd,edf->ecf", xg, gate,
+                   preferred_element_type=xg.dtype)
+    h = nn.activation(act)(g) * h
+    return jnp.einsum("ecf,efd->ecd", h, down,
+                      preferred_element_type=xg.dtype)
+
+
+def _dispatch_local(x2d, w, idx, up, gate, down, m: MoEConfig, act: str,
+                    e_local: int, local_offset) -> jax.Array:
+    """Sort-based capacity dispatch for the local expert slice.
+
+    x2d (T, D); w/idx (T, K); expert weights (E_loc, ...). Tokens routed to
+    non-local experts are ignored here (another shard owns them).
+    """
+    t, d = x2d.shape
+    k = m.top_k
+    cap = max(1, int(math.ceil(t * k / m.num_experts * m.capacity_factor)))
+
+    flat_e = idx.reshape(-1)                        # (T*K,) global expert ids
+    local_e = flat_e - local_offset
+    is_local = (local_e >= 0) & (local_e < e_local)
+    sort_key = jnp.where(is_local, local_e, e_local)
+    order = jnp.argsort(sort_key, stable=True)
+    sorted_e = sort_key[order]
+    sorted_tok = (jnp.arange(t * k) // k)[order]
+    sorted_w = w.reshape(-1)[order]
+
+    counts = jnp.bincount(sorted_e, length=e_local + 1)[:e_local]
+    offsets = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                               jnp.cumsum(counts)])[:e_local]
+    slot = offsets[:, None] + jnp.arange(cap)[None, :]        # (E_loc, C)
+    valid = jnp.arange(cap)[None, :] < jnp.minimum(counts, cap)[:, None]
+    slot = jnp.clip(slot, 0, t * k - 1)
+    tok_of_slot = sorted_tok[slot]                            # (E_loc, C)
+    w_of_slot = jnp.where(valid, sorted_w[slot], 0.0)
+
+    xg = jnp.take(x2d, tok_of_slot.reshape(-1), axis=0).reshape(
+        e_local, cap, d)
+    yg = _local_expert_ffn(xg, up, gate, down, act)
+    out = jnp.zeros((t, d), jnp.float32)
+    out = out.at[tok_of_slot.reshape(-1)].add(
+        (yg.astype(jnp.float32) * w_of_slot[..., None]).reshape(-1, d))
+    return out.astype(x2d.dtype)
+
+
+def moe_ffn(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (..., S, D) -> (y, aux_loss). EP via shard_map when mesh is set."""
+    m = cfg.moe
+    lead = x.shape[:-1]
+    mesh, token_axes, expert_axis = get_ep_mesh()
+
+    def run(x_loc, router_w, up, gate, down, *, e_local, offset, in_map):
+        x2d = x_loc.reshape(-1, x_loc.shape[-1])
+        w, idx, aux_lb, aux_z = router_topk(x2d, router_w, m)
+        y = _dispatch_local(x2d, w, idx, up, gate, down, m, cfg.act,
+                            e_local, offset)
+        aux = m.router_aux_weight * aux_lb + m.router_z_weight * aux_z
+        if in_map:
+            # combine expert contributions across the EP axis in bf16 —
+            # halves the dominant model-axis all-reduce (§Perf K1)
+            y = jax.lax.psum(y.astype(x_loc.dtype), expert_axis)
+            axes = tuple(a for a in token_axes if a in mesh.axis_names)
+            if axes:
+                aux = jax.lax.pmean(aux, axes)
+        return y.reshape(x_loc.shape), aux
+
+    if mesh is None:
+        y, aux = run(x, p["router"], p["up"], p["gate"], p["down"],
+                     e_local=m.num_experts, offset=0, in_map=False)
+    else:
+        ep_size = mesh.shape[expert_axis]
+        e_local = m.num_experts // ep_size
+        tok_spec = P(tuple(a for a in token_axes if a in mesh.axis_names),
+                     *([None] * (x.ndim - 1)))
+
+        def mapped(x_loc, router_w, up, gate, down):
+            offset = jax.lax.axis_index(expert_axis) * e_local
+            return run(x_loc, router_w, up, gate, down,
+                       e_local=e_local, offset=offset, in_map=True)
+
+        y, aux = shard_map(
+            mapped, mesh=mesh,
+            in_specs=(tok_spec, P(), P(expert_axis), P(expert_axis),
+                      P(expert_axis)),
+            out_specs=(tok_spec, P()),
+            check_vma=False,
+        )(x, p["router"], p["up"], p["gate"], p["down"])
+
+    if m.num_shared:
+        y = y + nn.mlp(p["shared"], x, cfg.act)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# layers / forward / decode
+# ---------------------------------------------------------------------------
+
+
+def _attn_block(p, cfg: ModelConfig, x, positions, train: bool):
+    h = nn.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = _project_qkv(p, cfg, h, positions, repeat_kv=True)
+    if cfg.spiking is not None:
+        t = x.shape[0]
+        q, k, v = (_spike(u, cfg, t) for u in (q, k, v))
+        fold = lambda u: u.reshape(-1, *u.shape[2:])
+        attn = _attend_full_seq(cfg, "full", fold(q), fold(k), fold(v),
+                                delta=p["delta"])
+        attn = attn.reshape(*x.shape[:-1], cfg.q_dim)
+    else:
+        attn = _attend_full_seq(cfg, "full", q, k, v)
+        attn = attn.reshape(*x.shape[:-1], cfg.q_dim)
+    return x + nn.linear(p["wo"], constrain(attn, "batch", "seq", "model"))
+
+
+def _moe_layer(p, cfg: ModelConfig, x, positions, train: bool):
+    x = _attn_block(p, cfg, x, positions, train)
+    h = nn.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    y, aux = moe_ffn(p["moe"], h, cfg)
+    # name the expert output so the remat policy can SAVE it: recomputing
+    # the expert FFN in bwd would re-gather the FSDP-sharded expert
+    # weights a 3rd time (§Perf K4)
+    y = checkpoint_name(y, "moe_out")
+    return constrain(x + y, "batch", "seq", "embed"), aux
+
+
+def _dense_layer(p, cfg: ModelConfig, x, positions, train: bool):
+    x = _attn_block(p, cfg, x, positions, train)
+    h = nn.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return constrain(x + nn.mlp(p["mlp"], h, cfg.act), "batch", "seq", "embed")
+
+
+def forward(params, cfg: ModelConfig, batch, *, train: bool = False,
+            inputs_embeds: Optional[jax.Array] = None):
+    tokens = batch["tokens"]
+    x = nn.embed(params["embed"], tokens) if inputs_embeds is None \
+        else inputs_embeds
+    x = constrain(x, "batch", "seq", "embed")
+    positions = jnp.arange(x.shape[-2])
+    if cfg.spiking is not None:
+        x = jnp.broadcast_to(x[None], (cfg.spiking.time_steps,) + x.shape)
+
+    dense_fn, moe_fn = _dense_layer, _moe_layer
+    if cfg.remat and train:
+        dense_fn = jax.checkpoint(dense_fn, static_argnums=(1, 4),
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+        moe_fn = jax.checkpoint(
+            moe_fn, static_argnums=(1, 4),
+            policy=jax.checkpoint_policies.save_only_these_names("moe_out"))
+
+    if cfg.moe.first_k_dense:
+        def dbody(x, lp):
+            return dense_fn(lp, cfg, x, positions, train), None
+        x, _ = jax.lax.scan(dbody, x, params["dense_layers"])
+
+    def body(x, lp):
+        x, aux = moe_fn(lp, cfg, x, positions, train)
+        return x, aux
+    x, auxes = jax.lax.scan(body, x, params["layers"])
+
+    if cfg.spiking is not None:
+        x = x.mean(axis=0)
+    x = nn.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = nn.linear(params["lm_head"], x).astype(jnp.float32)
+    return constrain(logits, "batch", "seq", "vocab"), \
+        {"moe_aux": jnp.sum(auxes)}
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               batch=None, params=None) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    b = batch_size * (cfg.spiking.time_steps if cfg.spiking else 1)
+
+    def kv(n_layers):
+        return {
+            "k": jnp.zeros((n_layers, b, max_len, cfg.num_kv_heads,
+                            cfg.head_dim), dt),
+            "v": jnp.zeros((n_layers, b, max_len, cfg.num_kv_heads,
+                            cfg.head_dim), dt),
+            "pos": jnp.full((n_layers, max_len), -1, jnp.int32),
+        }
+    cache = {"layers": kv(cfg.num_layers - cfg.moe.first_k_dense)}
+    if cfg.moe.first_k_dense:
+        cache["dense_layers"] = kv(cfg.moe.first_k_dense)
+    return cache
+
+
+def _decode_attn(p, cfg: ModelConfig, x, cache_l, pos):
+    h = nn.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = _project_qkv(p, cfg, h, jnp.full((1,), pos))
+    s_len = cache_l["k"].shape[1]
+    slot = pos % s_len
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache_l["k"], k, slot, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache_l["v"], v, slot, 1)
+    entry_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["pos"], jnp.full((1,), pos, jnp.int32), slot, 0)
+    attn = nn.decode_attention(q, k_cache, v_cache, entry_pos=entry_pos,
+                               cur_pos=pos)
+    x = x + nn.linear(p["wo"], attn.reshape(x.shape[0], 1, cfg.q_dim))
+    return x, {"k": k_cache, "v": v_cache, "pos": entry_pos}
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    x = nn.embed(params["embed"], tokens)
+    x = constrain(x, "batch", None, "embed")
+    new_cache = {}
+
+    if cfg.moe.first_k_dense:
+        def dbody(x, inp):
+            lp, c = inp
+            x, nc = _decode_attn(lp, cfg, x, c, pos)
+            h = nn.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+            x = x + nn.mlp(lp["mlp"], h, cfg.act)
+            return x, nc
+        x, nd = jax.lax.scan(dbody, x,
+                             (params["dense_layers"], cache["dense_layers"]))
+        new_cache["dense_layers"] = nd
+
+    def body(x, inp):
+        lp, c = inp
+        x, nc = _decode_attn(lp, cfg, x, c, pos)
+        h = nn.rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        y, _ = moe_ffn(lp["moe"], h, cfg)
+        return x + y, nc
+    x, nl = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+    new_cache["layers"] = nl
+
+    x = nn.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = nn.linear(params["lm_head"], x).astype(jnp.float32)
+    return logits, new_cache

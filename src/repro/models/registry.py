@@ -1,0 +1,70 @@
+"""Model registry: family -> (init, forward, init_cache, decode_step).
+
+Uniform API:
+  init(cfg, key)                      -> params pytree
+  forward(params, cfg, batch, train=) -> (logits, aux)
+  init_cache(cfg, batch, max_len, ...)-> decode cache pytree (LM families)
+  decode_step(params, cfg, cache, tokens, pos) -> (logits, new_cache)
+
+Vision/classification families (spikingformer, cifarnet) carry BatchNorm
+running stats: ``init_state(cfg)`` + aux['state'].
+"""
+from __future__ import annotations
+
+from types import ModuleType
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+from . import transformer, moe, rwkv, hybrid, encdec, vlm, spikingformer
+
+FAMILIES: Dict[str, ModuleType] = {
+    "dense": transformer,
+    "moe": moe,
+    "rwkv": rwkv,
+    "hybrid": hybrid,
+    "encdec": encdec,
+    "vlm": vlm,
+    "spikingformer": spikingformer,
+    "cifarnet": spikingformer,
+}
+
+# families whose long_500k cell is skipped (pure full attention; DESIGN.md §5)
+NO_LONG_CONTEXT = {"nemotron-4-15b", "granite-20b", "whisper-small",
+                   "kimi-k2-1t-a32b", "deepseek-moe-16b"}
+# families without an autoregressive decode step
+NO_DECODE = {"spikingformer", "cifarnet"}
+
+
+def family_module(cfg: ModelConfig) -> ModuleType:
+    try:
+        return FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r}") from None
+
+
+def init(cfg: ModelConfig, key):
+    return family_module(cfg).init(cfg, key)
+
+
+def forward(params, cfg: ModelConfig, batch, *, train: bool = False, **kw):
+    return family_module(cfg).forward(params, cfg, batch, train=train, **kw)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, batch=None,
+               params=None):
+    return family_module(cfg).init_cache(cfg, batch_size, max_len,
+                                         batch=batch, params=params)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    return family_module(cfg).decode_step(params, cfg, cache, tokens, pos)
+
+
+def has_decode(cfg: ModelConfig) -> bool:
+    return cfg.family not in NO_DECODE
+
+
+def init_state(cfg: ModelConfig):
+    if cfg.family in ("spikingformer", "cifarnet"):
+        return spikingformer.init_state(cfg)
+    return None

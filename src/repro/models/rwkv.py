@@ -1,0 +1,287 @@
+"""RWKV6 "Finch" (attention-free, data-dependent decay) — rwkv6-3b.
+
+Faithful to arXiv:2404.05892: data-dependent token-shift (ddlerp via
+low-rank adapters over 5 mix targets r/k/v/w/g), per-channel data-dependent
+decay ``w = exp(-exp(w0 + lora_w(x)))``, per-head matrix-valued state
+``S ∈ R^{n x n}`` with bonus ``u``, grouped head-norm, squared-ReLU channel
+mix. Sequence recurrence is a ``lax.scan`` (the chunkwise-parallel form is a
+§Perf hillclimb — see EXPERIMENTS.md).
+
+FireFly-T applicability: attention-free ⇒ the binary engine does NOT apply
+(DESIGN.md §5); implemented without the technique per the assignment.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import constrain
+from . import nn
+
+N_MIX = 5  # r, k, v, w, g
+
+
+def _layer_init(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    r = cfg.rwkv
+    d = cfg.d_model
+    n = r.head_size
+    h = d // n
+    ks = jax.random.split(key, 12)
+    std = 1.0 / math.sqrt(d)
+    tm = {
+        "mu_x": jnp.zeros((d,), dt),
+        "mu": nn.normal(ks[0], (N_MIX, d), 0.02, dt),
+        "A_mix": nn.normal(ks[1], (d, N_MIX * r.lora_mix), std, dt),
+        "B_mix": nn.normal(ks[2], (N_MIX, r.lora_mix, d), 0.02, dt),
+        "w0": nn.normal(ks[3], (d,), 0.5, jnp.float32) - 5.0,
+        "A_w": nn.normal(ks[4], (d, r.lora_decay), std, dt),
+        "B_w": nn.normal(ks[5], (r.lora_decay, d), 0.02, jnp.float32),
+        "wr": nn.linear_init(ks[6], d, d, dtype=dt),
+        "wk": nn.linear_init(ks[7], d, d, dtype=dt),
+        "wv": nn.linear_init(ks[8], d, d, dtype=dt),
+        "wg": nn.linear_init(ks[9], d, d, dtype=dt),
+        "wo": nn.linear_init(ks[10], d, d,
+                             std=std / math.sqrt(2 * cfg.num_layers), dtype=dt),
+        "u": nn.normal(ks[11], (h, n), 0.02, jnp.float32),
+        "ln_x": nn.layernorm_init(d, dt),
+    }
+    kc = jax.random.split(ks[11], 4)
+    cm = {
+        "mu_k": jnp.full((d,), 0.5, dt),
+        "mu_r": jnp.full((d,), 0.5, dt),
+        "wk": nn.linear_init(kc[0], d, cfg.d_ff, dtype=dt),
+        "wv": nn.linear_init(kc[1], cfg.d_ff, d, dtype=dt),
+        "wr": nn.linear_init(kc[2], d, d, dtype=dt),
+    }
+    return {"ln1": nn.layernorm_init(d, dt), "tm": tm,
+            "ln2": nn.layernorm_init(d, dt), "cm": cm}
+
+
+def init(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    keys = jax.random.split(k_layers, cfg.num_layers)
+    return {
+        "embed": nn.embedding_init(k_embed, cfg.vocab_size, cfg.d_model, dt),
+        "ln0": nn.layernorm_init(cfg.d_model, dt),
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg))(keys),
+        "final_norm": nn.layernorm_init(cfg.d_model, dt),
+        "lm_head": nn.linear_init(k_head, cfg.d_model, cfg.vocab_size, dtype=dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# time mix
+# ---------------------------------------------------------------------------
+
+
+def _ddlerp(tm, x, x_prev):
+    """Data-dependent token-shift. x/x_prev: (B, S, D) -> (B, S, 5, D)."""
+    xx = x_prev - x
+    x_base = x + xx * tm["mu_x"].astype(x.dtype)
+    mix = jnp.tanh(nn.linear({"w": tm["A_mix"]}, x_base))
+    b, s, _ = mix.shape
+    mix = mix.reshape(b, s, N_MIX, -1)
+    lora = jnp.einsum("bsfr,frd->bsfd", mix.astype(jnp.float32),
+                      tm["B_mix"].astype(jnp.float32))
+    mus = tm["mu"].astype(jnp.float32)[None, None]
+    return (x[:, :, None] + xx[:, :, None] *
+            (mus + lora).astype(x.dtype))
+
+
+def _decay(tm, xw):
+    """Data-dependent per-channel decay in (0, 1). xw: (B, S, D)."""
+    lora = jnp.tanh(nn.linear({"w": tm["A_w"]}, xw)).astype(jnp.float32)
+    ww = tm["w0"] + lora @ tm["B_w"]
+    return jnp.exp(-jnp.exp(ww))  # fp32
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """Recurrent WKV. r/k/v/w: (B, S, H, n); state: (B, H, n, n).
+
+    Returns (y (B, S, H, n), final state). fp32 state math.
+    """
+    r, k, v, w = (t.astype(jnp.float32) for t in (r, k, v, w))
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp  # (B, H, n)
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,n,n)
+        y = jnp.einsum("bhn,bhnm->bhm", r_t, s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+_WKV_CLIP = 35.0  # exp-arg clamp for the intra-chunk k rescale (see note)
+
+
+def _wkv_chunked(r, k, v, w, u, state, chunk: int = 32):
+    """Chunk-parallel WKV — mathematically identical to :func:`_wkv_scan`
+    but materializes the (n x n) state once per CHUNK instead of per
+    token, turning the per-token HBM-bound recurrence into MXU matmuls
+    (§Perf hillclimb R1; the baseline scan's state carry traffic is
+    2 * B*H*n*n*4B per token per layer — 64x reduced at chunk=32, and the
+    intra-chunk work becomes (C x C) x (C x n) matmuls).
+
+    Derivation (per head; S_t = diag(w_t) S_{t-1} + k_t^T v_t;
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)); with L_t = sum_{s<=t} log w_s
+    inside a chunk:
+       y_t = (r_t e^{L_{t-1}}) S_chunk0
+             + sum_{s<t} (r_t e^{L_{t-1}}) . (k_s e^{-L_s}) v_s
+             + (r_t . (u k_t)) v_t
+       S_next = e^{L_C} S_chunk0 + sum_s (k_s e^{L_C - L_s})^T v_s
+    All exponents except -L_s are <= 0 (stable); -L_s is clamped at
+    _WKV_CLIP — only pathological decays (w < e^-35 within one chunk)
+    are affected (RWKV6 trained decays are far milder; equivalence is
+    property-tested against the scan).
+    """
+    b, s_len, h, n = r.shape
+    pad = (-s_len) % chunk
+    if pad:
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    nc = r.shape[1] // chunk
+    shp = (b, nc, chunk, h, n)
+    rc, kc, vc, wc = (t.astype(jnp.float32).reshape(shp)
+                      for t in (r, k, v, w))
+
+    logw = jnp.log(jnp.maximum(wc, 1e-38))
+    lcum = jnp.cumsum(logw, axis=2)                  # L_t, <= 0
+    lprev = lcum - logw                              # L_{t-1}
+    a = rc * jnp.exp(lprev)                          # (B,NC,C,H,n)
+    bb = kc * jnp.exp(jnp.minimum(-lcum, _WKV_CLIP))
+    scores = jnp.einsum("bcthn,bcshn->bchts", a, bb)  # (B,NC,H,C,C)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    scores = jnp.where(tri[None, None, None], scores, 0.0)
+    diag = jnp.einsum("bcthn,bcthn->bcht", rc, kc * u[None, None, None])
+    scores = scores + jnp.eye(chunk)[None, None, None] * diag[..., :, None]
+    y_intra = jnp.einsum("bchts,bcshn->bcthn", scores, vc)
+
+    l_last = lcum[:, :, -1:]                          # (B,NC,1,H,n)
+    kbar = kc * jnp.exp(l_last - lcum)                # <= k, stable
+    decay = jnp.exp(l_last[:, :, 0])                  # (B,NC,H,n)
+
+    def chunk_step(s0, inp):
+        a_c, kbar_c, v_c, d_c = inp                   # (B,C,H,n)x3,(B,H,n)
+        y_state = jnp.einsum("bthn,bhnm->bthm", a_c, s0)
+        s_new = d_c[..., :, None] * s0 + \
+            jnp.einsum("bthn,bthm->bhnm", kbar_c, v_c)
+        return s_new, y_state
+
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(kbar, 1, 0),
+          jnp.moveaxis(vc, 1, 0), jnp.moveaxis(decay, 1, 0))
+    state, y_state = jax.lax.scan(chunk_step, state, xs)
+    y = (y_intra + jnp.moveaxis(y_state, 0, 1)).reshape(
+        b, nc * chunk, h, n)[:, :s_len]
+    return y, state
+
+
+def _time_mix(tm, cfg: ModelConfig, x, x_prev, state):
+    """x: (B, S, D); x_prev: (B, D) shift state; state: (B, H, n, n)."""
+    b, s, d = x.shape
+    n = cfg.rwkv.head_size
+    h = d // n
+    prev = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xs = _ddlerp(tm, x, prev)
+    xr, xk, xv, xw, xg = (xs[:, :, i] for i in range(N_MIX))
+    r = nn.linear(tm["wr"], xr).reshape(b, s, h, n)
+    k = nn.linear(tm["wk"], xk).reshape(b, s, h, n)
+    v = nn.linear(tm["wv"], xv).reshape(b, s, h, n)
+    g = jax.nn.silu(nn.linear(tm["wg"], xg))
+    w = _decay(tm, xw).reshape(b, s, h, n)
+    u = tm["u"].astype(jnp.float32)
+    if cfg.rwkv.wkv_chunk and s > 1:
+        y, state = _wkv_chunked(r, k, v, w, u, state,
+                                chunk=cfg.rwkv.wkv_chunk)
+    else:
+        y, state = _wkv_scan(r, k, v, w, u, state)
+    y = nn.groupnorm(tm["ln_x"], y.reshape(b, s, d).astype(x.dtype), groups=h)
+    out = nn.linear(tm["wo"], y * g)
+    return out, x[:, -1], state
+
+
+def _channel_mix(cm, x, x_prev):
+    prev = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xx = prev - x
+    xk = x + xx * cm["mu_k"].astype(x.dtype)
+    xr = x + xx * cm["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(nn.linear(cm["wk"], xk)))
+    kv = nn.linear(cm["wv"], k)
+    return jax.nn.sigmoid(nn.linear(cm["wr"], xr).astype(jnp.float32)
+                          ).astype(x.dtype) * kv, x[:, -1]
+
+
+def _layer(p, cfg: ModelConfig, x, st):
+    """st: {'wkv': (B,H,n,n), 'tm_prev': (B,D), 'cm_prev': (B,D)}."""
+    y, tm_prev, wkv = _time_mix(p["tm"], cfg, nn.layernorm(p["ln1"], x),
+                                st["tm_prev"], st["wkv"])
+    x = x + y
+    y, cm_prev = _channel_mix(p["cm"], nn.layernorm(p["ln2"], x),
+                              st["cm_prev"])
+    x = x + y
+    return constrain(x, "batch", "seq", "embed"), \
+        {"wkv": wkv, "tm_prev": tm_prev, "cm_prev": cm_prev}
+
+
+def _zero_state(cfg: ModelConfig, n_layers: int, b: int):
+    n = cfg.rwkv.head_size
+    h = cfg.d_model // n
+    return {
+        "wkv": jnp.zeros((n_layers, b, h, n, n), jnp.float32),
+        "tm_prev": jnp.zeros((n_layers, b, cfg.d_model), jnp.dtype(cfg.dtype)),
+        "cm_prev": jnp.zeros((n_layers, b, cfg.d_model), jnp.dtype(cfg.dtype)),
+    }
+
+
+def forward(params, cfg: ModelConfig, batch, *, train: bool = False,
+            inputs_embeds: Optional[jax.Array] = None):
+    tokens = batch["tokens"]
+    x = nn.embed(params["embed"], tokens) if inputs_embeds is None \
+        else inputs_embeds
+    x = nn.layernorm(params["ln0"], x)
+    x = constrain(x, "batch", "seq", "embed")
+    st0 = _zero_state(cfg, cfg.num_layers, x.shape[0])
+
+    layer_fn = _layer
+    if cfg.remat and train:
+        layer_fn = jax.checkpoint(_layer, static_argnums=(1,),
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+
+    def body(x, inp):
+        lp, st = inp
+        x, _ = layer_fn(lp, cfg, x, st)
+        return x, None
+    x, _ = jax.lax.scan(body, x, (params["layers"], st0))
+    x = nn.layernorm(params["final_norm"], x)
+    logits = nn.linear(params["lm_head"], x).astype(jnp.float32)
+    return constrain(logits, "batch", "seq", "vocab"), {}
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               batch=None, params=None):
+    return _zero_state(cfg, cfg.num_layers, batch_size)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """O(1)-state decode: tokens (B, 1)."""
+    x = nn.embed(params["embed"], tokens)
+    x = nn.layernorm(params["ln0"], x)
+
+    def body(x, inp):
+        lp, st = inp
+        x, new_st = _layer(lp, cfg, x, st)
+        return x, new_st
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = nn.layernorm(params["final_norm"], x)
+    logits = nn.linear(params["lm_head"], x).astype(jnp.float32)
+    return logits, new_cache

@@ -1,0 +1,116 @@
+"""Mamba-style selective SSM layer (used by hymba's parallel mamba heads).
+
+Mamba-1 selective scan: input-dependent (Δ, B, C) with diagonal A, causal
+depthwise conv front, gated output. State is ``(B, d_inner, d_state)``
+(hymba: d_state=16). Sequence recurrence via ``lax.scan``; the chunked
+parallel form is a §Perf item.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from . import nn
+
+
+def d_inner_of(cfg: ModelConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def dt_rank_of(cfg: ModelConfig) -> int:
+    return cfg.ssm.dt_rank or -(-cfg.d_model // 16)
+
+
+def ssm_init(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    s = cfg.ssm
+    d = cfg.d_model
+    di = d_inner_of(cfg)
+    dr = dt_rank_of(cfg)
+    ks = jax.random.split(key, 6)
+    a_init = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32)[None],
+                      (di, 1))
+    return {
+        "in_proj": nn.linear_init(ks[0], d, 2 * di, dtype=dt),
+        "conv_w": nn.normal(ks[1], (s.d_conv, di), 1.0 / math.sqrt(s.d_conv),
+                            dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": nn.linear_init(ks[2], di, dr + 2 * s.d_state, dtype=dt),
+        "dt_proj": nn.linear_init(ks[3], dr, di, bias=True, dtype=dt),
+        "A_log": jnp.log(a_init),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": nn.linear_init(ks[4], di, d, dtype=dt),
+    }
+
+
+def _ssm_params(p, x_c, cfg: ModelConfig):
+    """x_c: (B, S, di) post-conv -> (dt (B,S,di), Bm (B,S,N), Cm (B,S,N))."""
+    s = cfg.ssm
+    dr = dt_rank_of(cfg)
+    dbc = nn.linear(p["x_proj"], x_c)
+    dt_r, bm, cm = jnp.split(dbc, [dr, dr + s.d_state], axis=-1)
+    dt = jax.nn.softplus(nn.linear(p["dt_proj"], dt_r).astype(jnp.float32))
+    return dt, bm.astype(jnp.float32), cm.astype(jnp.float32)
+
+
+def ssm_forward(p, x, cfg: ModelConfig, state=None, conv_state=None):
+    """Full-sequence selective scan. x: (B, S, D).
+
+    Returns (y (B, S, D), final ssm state, final conv state).
+    """
+    s = cfg.ssm
+    b, slen, _ = x.shape
+    di = d_inner_of(cfg)
+    xz = nn.linear(p["in_proj"], x)
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    if conv_state is not None:
+        x_pad = jnp.concatenate([conv_state, x_in], axis=1)
+    else:
+        x_pad = jnp.pad(x_in, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+    # causal depthwise conv over the padded buffer
+    out = jnp.zeros((b, slen, di), jnp.float32)
+    for i in range(s.d_conv):
+        out = out + x_pad[:, i:i + slen].astype(jnp.float32) * \
+            p["conv_w"][i].astype(jnp.float32)
+    x_c = jax.nn.silu(out + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+
+    dt, bm, cm = _ssm_params(p, x_c, cfg)
+    a = -jnp.exp(p["A_log"])                                   # (di, N)
+    h0 = jnp.zeros((b, di, s.d_state), jnp.float32) if state is None else state
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp                              # (B,di),(B,di),(B,N),(B,N)
+        da = jnp.exp(dt_t[..., None] * a[None])                # (B,di,N)
+        h = da * h + dt_t[..., None] * b_t[:, None, :] * x_t[..., None]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(x_c.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt, 1, 0), jnp.moveaxis(bm, 1, 0),
+          jnp.moveaxis(cm, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1) + x_c.astype(jnp.float32) * p["D"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    new_conv_state = x_pad[:, -(s.d_conv - 1):] if s.d_conv > 1 else \
+        jnp.zeros((b, 0, di), x.dtype)
+    return nn.linear(p["out_proj"], y), h_final, new_conv_state
+
+
+def ssm_decode(p, x, cfg: ModelConfig, state, conv_state):
+    """One-token decode. x: (B, 1, D); state (B, di, N); conv (B, K-1, di)."""
+    y, h, conv = ssm_forward(p, x, cfg, state=state, conv_state=conv_state)
+    return y, h, conv
+
+
+def zero_states(cfg: ModelConfig, n_layers: int, b: int):
+    s = cfg.ssm
+    di = d_inner_of(cfg)
+    return {
+        "ssm": jnp.zeros((n_layers, b, di, s.d_state), jnp.float32),
+        "conv": jnp.zeros((n_layers, b, s.d_conv - 1, di),
+                          jnp.dtype(cfg.dtype)),
+    }

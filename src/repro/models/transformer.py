@@ -1,0 +1,348 @@
+"""Dense decoder-only transformer family.
+
+Covers: nemotron-4-15b (full attn, squared-ReLU), gemma3-12b (5:1
+local:global, qk-norm), h2o-danube-3-4b (SWA), granite-20b (MQA),
+llava-next-mistral-7b backbone (SWA; see vlm.py for the frontend).
+
+Execution modes:
+  forward      — full-sequence (train / prefill); lax.scan over layers,
+                 chunked flash attention (banded for SWA / local layers).
+  decode_step  — one token against a KV cache (full or rolling window).
+  spiking mode — activations are LIF spike trains over T_s time steps and
+                 attention is binary attention (the paper's SSA); enabled by
+                 cfg.spiking (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.spiking import binarize, lif_scan
+from repro.parallel.sharding import constrain
+from . import nn
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _layer_init(key, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    p = {
+        "ln1": nn.rmsnorm_init(cfg.d_model, dt),
+        "wq": nn.linear_init(ks[0], cfg.d_model, cfg.q_dim, dtype=dt),
+        "wk": nn.linear_init(ks[1], cfg.d_model, cfg.kv_dim, dtype=dt),
+        "wv": nn.linear_init(ks[2], cfg.d_model, cfg.kv_dim, dtype=dt),
+        "wo": nn.linear_init(ks[3], cfg.q_dim, cfg.d_model,
+                             std=1.0 / math.sqrt(cfg.q_dim * 2 * cfg.num_layers),
+                             dtype=dt),
+        "ln2": nn.rmsnorm_init(cfg.d_model, dt),
+        "mlp": nn.mlp_init(ks[4], cfg.d_model, cfg.d_ff, gated=cfg.gated,
+                           dtype=dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = nn.rmsnorm_init(cfg.head_dim, dt)
+        p["k_norm"] = nn.rmsnorm_init(cfg.head_dim, dt)
+    if cfg.spiking is not None:
+        p["delta"] = jnp.asarray(cfg.spiking.attn_threshold_init, jnp.float32)
+    return p
+
+
+def init(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    params: Dict[str, Any] = {
+        "embed": nn.embedding_init(k_embed, cfg.vocab_size, cfg.d_model, dt),
+        "final_norm": nn.rmsnorm_init(cfg.d_model, dt),
+    }
+    if cfg.attn_type == "local_global":
+        g = cfg.num_layers // cfg.global_every
+        keys = jax.random.split(k_layers, cfg.num_layers).reshape(
+            g, cfg.global_every, 2)
+        params["groups"] = jax.vmap(jax.vmap(lambda k: _layer_init(k, cfg)))(keys)
+    else:
+        keys = jax.random.split(k_layers, cfg.num_layers)
+        params["layers"] = jax.vmap(lambda k: _layer_init(k, cfg))(keys)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = nn.linear_init(k_head, cfg.d_model,
+                                           cfg.vocab_size, dtype=dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer application (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(p, cfg: ModelConfig, h, positions, repeat_kv: bool = False):
+    """h: (..., S, D) -> q (..., S, H, hd), k/v (..., S, KH, hd), roped.
+
+    ``repeat_kv`` broadcasts KV heads up to H *before* attention (full-seq
+    paths): with heads TP-sharded over 'model', the grouped-GQA reshape
+    (H -> KH x rep) would cross shard boundaries and force all-gathers —
+    repeating locally keeps every reshape sharding-aligned (each shard
+    expands only its own KV slice). Decode paths keep KV unrepeated (the
+    cache stores KH heads).
+    """
+    lead = h.shape[:-2]
+    s = h.shape[-2]
+    q = nn.linear(p["wq"], h).reshape(*lead, s, cfg.num_heads, cfg.head_dim)
+    k = nn.linear(p["wk"], h).reshape(*lead, s, cfg.num_kv_heads, cfg.head_dim)
+    v = nn.linear(p["wv"], h).reshape(*lead, s, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = nn.rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = nn.rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    # rope operates on (B, L, H, D): fold extra leading dims
+    q = nn.rope(q.reshape(-1, s, cfg.num_heads, cfg.head_dim), positions,
+                cfg.rope_theta).reshape(*lead, s, cfg.num_heads, cfg.head_dim)
+    k = nn.rope(k.reshape(-1, s, cfg.num_kv_heads, cfg.head_dim), positions,
+                cfg.rope_theta).reshape(*lead, s, cfg.num_kv_heads, cfg.head_dim)
+    if repeat_kv and cfg.num_heads != cfg.num_kv_heads:
+        rep = cfg.num_heads // cfg.num_kv_heads
+        k = jnp.repeat(k, rep, axis=-2)
+        v = jnp.repeat(v, rep, axis=-2)
+    prefix = (None,) * (len(lead) - 1) + ("batch", "seq")
+    kv_name = "heads" if repeat_kv else "kv_heads"
+    q = constrain(q, *prefix, "heads", None)
+    k = constrain(k, *prefix, kv_name, None)
+    v = constrain(v, *prefix, kv_name, None)
+    return q, k, v
+
+
+def _attend_full_seq(cfg: ModelConfig, kind: str, q, k, v, delta=None):
+    """kind: 'full' | 'window'. Shapes (B', S, H/KH, hd)."""
+    window = cfg.window if kind == "window" else None
+    if cfg.spiking is not None:
+        return nn.binary_flash_attention(
+            q, k, v, delta=delta, alpha=cfg.spiking.surrogate_alpha,
+            causal=True, window=window,
+            binarize_scores=cfg.spiking.binarize_scores)
+    if window is not None:
+        return nn.banded_flash_attention(q, k, v, window=window)
+    return nn.flash_attention(q, k, v, causal=True)
+
+
+def _spike(x, cfg: ModelConfig, t_steps: int):
+    """LIF over the time axis; x: (T, B, S, D) currents -> spikes."""
+    spikes, _ = lif_scan(x, cfg.spiking)
+    return spikes
+
+
+def apply_layer(p, cfg: ModelConfig, x, positions, kind: str, train: bool):
+    """x: (B, S, D) or (T, B, S, D) in spiking mode."""
+    spiking = cfg.spiking is not None
+    h = nn.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = _project_qkv(p, cfg, h, positions, repeat_kv=True)
+    if spiking:
+        t = x.shape[0]
+        q, k, v = (_spike(u, cfg, t) for u in (q, k, v))
+        fold = lambda u: u.reshape(-1, *u.shape[2:])
+        attn = _attend_full_seq(cfg, kind, fold(q), fold(k), fold(v),
+                                delta=p["delta"])
+        attn = attn.reshape(*x.shape[:-1], cfg.q_dim)
+    else:
+        attn = _attend_full_seq(cfg, kind, q, k, v)
+        attn = attn.reshape(*x.shape[:-1], cfg.q_dim)
+    # q_dim stays 'model'-sharded into the row-parallel wo (§Perf F2 —
+    # constraining to replicated here forced a (B,S,H,hd) all-gather)
+    attn = constrain(attn, "batch", "seq", "model")
+    x = x + nn.linear(p["wo"], attn)
+    h2 = nn.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if spiking:
+        up = nn.linear(p["mlp"]["up"], h2)
+        hidden = _spike(up, cfg, x.shape[0])
+        x = x + nn.linear(p["mlp"]["down"], hidden)
+    else:
+        x = x + nn.mlp(p["mlp"], h2, cfg.act)
+    return constrain(x, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ModelConfig, batch, *, train: bool = False,
+            inputs_embeds: Optional[jax.Array] = None):
+    """batch: {'tokens': (B, S)}; returns (logits (B, S, V), aux dict)."""
+    tokens = batch["tokens"]
+    x = nn.embed(params["embed"], tokens) if inputs_embeds is None \
+        else inputs_embeds
+    x = constrain(x, "batch", "seq", "embed")
+    s = x.shape[-2]
+    positions = jnp.arange(s)
+    if cfg.spiking is not None:
+        x = jnp.broadcast_to(x[None], (cfg.spiking.time_steps,) + x.shape)
+
+    layer_fn = apply_layer
+    if cfg.remat and train:
+        layer_fn = jax.checkpoint(apply_layer,
+                                  static_argnums=(1, 4, 5),
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+
+    if cfg.attn_type == "local_global":
+        def group_body(x, gp):
+            for j in range(cfg.global_every):
+                sub = jax.tree_util.tree_map(lambda a: a[j], gp)
+                kind = "full" if j == cfg.global_every - 1 else "window"
+                x = layer_fn(sub, cfg, x, positions, kind, train)
+            return x, None
+        x, _ = jax.lax.scan(group_body, x, params["groups"])
+    else:
+        kind = "window" if cfg.attn_type == "swa" else "full"
+
+        def body(x, lp):
+            return layer_fn(lp, cfg, x, positions, kind, train), None
+        x, _ = jax.lax.scan(body, x, params["layers"])
+
+    if cfg.spiking is not None:
+        x = x.mean(axis=0)  # rate decoding over T_s
+    x = nn.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = nn.unembed(params["embed"], x)
+    else:
+        logits = nn.linear(params["lm_head"], x).astype(jnp.float32)
+    logits = constrain(logits, "batch", "seq", "vocab")
+    return logits, {}
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def _cache_len(cfg: ModelConfig, kind: str, max_len: int) -> int:
+    return min(cfg.window, max_len) if kind == "window" else max_len
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               batch=None, params=None) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    b = batch_size * (cfg.spiking.time_steps if cfg.spiking else 1)
+
+    def kv(n_layers, kind):
+        s = _cache_len(cfg, kind, max_len)
+        return {
+            "k": jnp.zeros((n_layers, b, s, cfg.num_kv_heads, cfg.head_dim), dt),
+            "v": jnp.zeros((n_layers, b, s, cfg.num_kv_heads, cfg.head_dim), dt),
+            "pos": jnp.full((n_layers, s), -1, jnp.int32),
+        }
+
+    if cfg.attn_type == "local_global":
+        g = cfg.num_layers // cfg.global_every
+        return {"local": kv(g * (cfg.global_every - 1), "window"),
+                "global": kv(g, "full")}
+    kind = "window" if cfg.attn_type == "swa" else "full"
+    return {"layers": kv(cfg.num_layers, kind)}
+
+
+def _decode_layer(p, cfg: ModelConfig, x, cache_l, pos, kind: str):
+    """x: (B', 1, D); cache_l: {'k','v','pos'} for this layer."""
+    h = nn.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    q, k, v = _project_qkv(p, cfg, h, jnp.full((1,), pos))
+    if cfg.spiking is not None:
+        # T_s is folded into the batch dim; unfold for LIF dynamics over time.
+        t = cfg.spiking.time_steps
+
+        def lif_t(u):
+            u_t = u.reshape(t, -1, *u.shape[1:])
+            s, _ = lif_scan(u_t, cfg.spiking)
+            return s.reshape(-1, *u.shape[1:])
+        q, k, v = lif_t(q), lif_t(k), lif_t(v)
+    window = cfg.window if kind == "window" else None
+    s_len = cache_l["k"].shape[1]
+    slot = pos % s_len  # rolling write for window caches; == pos for full
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache_l["k"], k, slot, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache_l["v"], v, slot, 1)
+    entry_pos = jax.lax.dynamic_update_slice_in_dim(
+        cache_l["pos"], jnp.full((1,), pos, jnp.int32), slot, 0)
+    if cfg.spiking is not None:
+        qf = q.reshape(q.shape[0], cfg.num_kv_heads,
+                       cfg.num_heads // cfg.num_kv_heads, cfg.head_dim)
+        sc = jnp.einsum("bgrd,bkgd->bgrk", qf.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) / math.sqrt(cfg.head_dim)
+        a = binarize(sc, p["delta"], cfg.spiking.surrogate_alpha)
+        valid = (entry_pos >= 0) & (entry_pos <= pos)
+        if window is not None:
+            valid &= entry_pos > pos - window
+        a = jnp.where(valid[None, None, None, :], a, 0.0)
+        attn = jnp.einsum("bgrk,bkgd->bgrd", a, v_cache.astype(jnp.float32))
+        attn = attn.reshape(x.shape[0], 1, cfg.q_dim).astype(x.dtype)
+    else:
+        attn = nn.decode_attention(q, k_cache, v_cache, entry_pos=entry_pos,
+                                   cur_pos=pos, window=window)
+        attn = attn.reshape(x.shape[0], 1, cfg.q_dim)
+    x = x + nn.linear(p["wo"], attn)
+    h2 = nn.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = x + nn.mlp(p["mlp"], h2, cfg.act)
+    new_cache = {"k": k_cache, "v": v_cache, "pos": entry_pos}
+    return x, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """tokens: (B, 1) int32; pos: scalar int32 (position being written).
+
+    Returns (logits (B, 1, V), new_cache).
+    """
+    x = nn.embed(params["embed"], tokens)
+    if cfg.spiking is not None:
+        t = cfg.spiking.time_steps
+        x = jnp.broadcast_to(x[None], (t,) + x.shape).reshape(-1, *x.shape[1:])
+    x = constrain(x, "batch", None, "embed")
+
+    if cfg.attn_type == "local_global":
+        g = cfg.num_layers // cfg.global_every
+        n_local = cfg.global_every - 1
+
+        def group_body(x, inp):
+            gp, c_loc, c_glob = inp
+            new_loc, new_glob = [], []
+            for j in range(cfg.global_every):
+                sub = jax.tree_util.tree_map(lambda a: a[j], gp)
+                if j < n_local:
+                    c = jax.tree_util.tree_map(lambda a: a[j], c_loc)
+                    x, nc = _decode_layer(sub, cfg, x, c, pos, "window")
+                    new_loc.append(nc)
+                else:
+                    c = jax.tree_util.tree_map(lambda a: a[0], c_glob)
+                    x, nc = _decode_layer(sub, cfg, x, c, pos, "full")
+                    new_glob.append(nc)
+            stack = lambda cs: jax.tree_util.tree_map(
+                lambda *a: jnp.stack(a), *cs)
+            return x, (stack(new_loc), stack(new_glob))
+
+        resh = lambda c, n: jax.tree_util.tree_map(
+            lambda a: a.reshape(g, n, *a.shape[1:]), c)
+        x, (nl, ng) = jax.lax.scan(
+            group_body, x,
+            (params["groups"], resh(cache["local"], n_local),
+             resh(cache["global"], 1)))
+        flat = lambda c: jax.tree_util.tree_map(
+            lambda a: a.reshape(-1, *a.shape[2:]), c)
+        new_cache = {"local": flat(nl), "global": flat(ng)}
+    else:
+        kind = "window" if cfg.attn_type == "swa" else "full"
+
+        def body(x, inp):
+            lp, c = inp
+            x, nc = _decode_layer(lp, cfg, x, c, pos, kind)
+            return x, nc
+        x, new_layers = jax.lax.scan(body, x,
+                                     (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_layers}
+
+    if cfg.spiking is not None:
+        t = cfg.spiking.time_steps
+        x = x.reshape(t, -1, *x.shape[1:]).mean(axis=0)
+    x = nn.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = nn.unembed(params["embed"], x)
+    else:
+        logits = nn.linear(params["lm_head"], x).astype(jnp.float32)
+    return logits, new_cache

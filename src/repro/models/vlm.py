@@ -1,0 +1,64 @@
+"""LLaVA-NeXT-style VLM: mistral-7b backbone + stubbed anyres vision
+frontend (llava-next-mistral-7b).
+
+Per the assignment the vision tower is a STUB: ``input_specs()`` provides
+precomputed patch embeddings ``(B, P, vision_dim)`` (anyres tiling happens
+upstream). The mm projector (2-layer GELU MLP, the real trainable part of
+LLaVA's adapter) IS implemented. Patch tokens are prepended to the text
+sequence; total sequence length is the shape's ``seq_len``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import nn, transformer
+
+
+def init(cfg: ModelConfig, key) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    k_backbone, k_proj = jax.random.split(key)
+    fr = cfg.frontend
+    ks = jax.random.split(k_proj, fr.projector_layers)
+    proj = [nn.linear_init(ks[0], fr.embed_dim, cfg.d_model, bias=True,
+                           dtype=dt)]
+    for i in range(1, fr.projector_layers):
+        proj.append(nn.linear_init(ks[i], cfg.d_model, cfg.d_model, bias=True,
+                                   dtype=dt))
+    params = transformer.init(cfg, k_backbone)
+    params["mm_projector"] = proj
+    return params
+
+
+def project_patches(params, patch_embeds):
+    x = patch_embeds
+    for i, p in enumerate(params["mm_projector"]):
+        if i:
+            x = jax.nn.gelu(x)
+        x = nn.linear(p, x)
+    return x
+
+
+def forward(params, cfg: ModelConfig, batch, *, train: bool = False):
+    """batch: {'tokens': (B, S_text), 'patch_embeds': (B, P, vision_dim)}.
+
+    Sequence = [projected patches ; text embeddings], length P + S_text.
+    """
+    vis = project_patches(params, batch["patch_embeds"])
+    txt = nn.embed(params["embed"], batch["tokens"])
+    embeds = jnp.concatenate([vis.astype(txt.dtype), txt], axis=1)
+    return transformer.forward(params, cfg, batch, train=train,
+                               inputs_embeds=embeds)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
+               batch=None, params=None):
+    return transformer.init_cache(cfg, batch_size, max_len)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+    """Text-token continuation after a multimodal prefill."""
+    return transformer.decode_step(params, cfg, cache, tokens, pos)

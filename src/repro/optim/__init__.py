@@ -1,0 +1,4 @@
+from .optimizers import Optimizer, adamw, adafactor, sgd
+from .schedule import constant_schedule, warmup_cosine
+from .grad_compress import (compress_state_init, compressed_gradients,
+                            int8_compress, int8_decompress)

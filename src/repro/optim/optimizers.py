@@ -1,0 +1,165 @@
+"""Functional optimizers (mini-optax: init/update pairs over pytrees).
+
+AdamW is the default; Adafactor (factored second moment) is used for the
+trillion-parameter MoE where Adam's fp32 m/v would not fit HBM. Optimizer
+state inherits the parameter sharding (ZeRO-style: FSDP-sharded params =>
+FSDP-sharded m/v automatically under GSPMD).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any]]  # (grads, state, params, step)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), \
+        norm
+
+
+def adamw(lr: Callable[[jax.Array], jax.Array] | float,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip_norm: Optional[float] = 1.0
+          ) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree_util.tree_map(zeros, params),
+                "v": jax.tree_util.tree_map(zeros, params),
+                "grad_norm": jnp.zeros((), jnp.float32)}
+
+    def update(grads, state, params, step):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+        corr1 = 1.0 - b1 ** t
+        corr2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mh = m / corr1
+            vh = v / corr2
+            step_ = mh / (jnp.sqrt(vh) + eps) + \
+                weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr_t * step_).astype(p.dtype)
+            return new_p, m, v
+
+        flat = jax.tree_util.tree_map(upd, grads, state["m"], state["v"],
+                                      params)
+        new_params = jax.tree_util.tree_map(lambda x: x[0], flat,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree_util.tree_map(lambda x: x[1], flat,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree_util.tree_map(lambda x: x[2], flat,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v,
+                            "grad_norm": gnorm}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: Callable[[jax.Array], jax.Array] | float,
+              decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern). Matrices store
+    per-row + per-col accumulators (O(n+m) not O(nm)); vectors fall back
+    to full accumulators."""
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init_leaf(p):
+        if p.ndim >= 2:
+            return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    def init(params):
+        return {"acc": jax.tree_util.tree_map(init_leaf, params),
+                "grad_norm": jnp.zeros((), jnp.float32)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, acc, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if p.ndim >= 2:
+                r = beta * acc["r"] + (1 - beta) * g2.mean(axis=-1)
+                c = beta * acc["c"] + (1 - beta) * g2.mean(axis=-2)
+                rc = r / jnp.maximum(
+                    r.mean(axis=-1, keepdims=True), eps)
+                vhat = rc[..., None] * c[..., None, :]
+                new_acc = {"r": r, "c": c}
+            else:
+                v = beta * acc["v"] + (1 - beta) * g2
+                vhat = v
+                new_acc = {"v": v}
+            u = g32 * jax.lax.rsqrt(vhat + eps)
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), new_acc
+
+        flat = jax.tree_util.tree_map(
+            upd, grads, state["acc"], params,
+            is_leaf=lambda x: isinstance(x, dict) and ("r" in x or "v" in x))
+        new_params = jax.tree_util.tree_map(
+            lambda x: x[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_acc = jax.tree_util.tree_map(
+            lambda x: x[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"acc": new_acc,
+                            "grad_norm": global_norm(grads)}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: Callable[[jax.Array], jax.Array] | float,
+        momentum: float = 0.9) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr))
+
+    def init(params):
+        return {"mu": jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                "grad_norm": jnp.zeros((), jnp.float32)}
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+
+        def upd(g, mu, p):
+            mu = momentum * mu + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * mu).astype(p.dtype), mu
+
+        flat = jax.tree_util.tree_map(upd, grads, state["mu"], params)
+        new_params = jax.tree_util.tree_map(
+            lambda x: x[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree_util.tree_map(
+            lambda x: x[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"mu": new_mu, "grad_norm": global_norm(grads)}
+
+    return Optimizer(init, update)

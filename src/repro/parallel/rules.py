@@ -1,0 +1,194 @@
+"""Per-family parameter / cache / batch sharding rules.
+
+Production meshes: (data=16, model=16) and (pod=2, data=16, model=16).
+Scheme (DESIGN.md §6): batch over ('pod','data'); FSDP over 'data'
+(GSPMD all-gathers weights per layer inside the scan); TP over 'model'
+(attention q/o + d_ff columns, vocab, experts, mamba d_inner, rwkv
+channels). Dims that don't divide fall back to replicated automatically
+(sharding.fit_spec_to_shape) — e.g. hymba's 25 heads, whisper's odd vocab.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple  # noqa: F401
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunShape
+from .sharding import fit_spec_to_shape, param_specs
+
+BATCH = ("pod", "data")
+FSDP = "data"
+TP = "model"
+
+_DENSE = [
+    (r"embed/table", P(TP, FSDP)),
+    (r"lm_head/w", P(FSDP, TP)),
+    (r"mm_projector/.*w", P(FSDP, TP)),
+    (r"(wq|wk|wv)/(w|b)", P(FSDP, TP)),
+    (r"wo/w", P(TP, FSDP)),
+    (r"mlp/(up|gate)/(w|b)", P(FSDP, TP)),
+    (r"mlp/down/w", P(TP, FSDP)),
+    (r"(self_attn|cross_attn|attn)/(wq|wk|wv)/(w|b)", P(FSDP, TP)),
+    (r"(self_attn|cross_attn|attn)/wo/w", P(TP, FSDP)),
+    (r"pos_embed", P(None, FSDP)),
+]
+
+_MOE = [
+    (r"moe/router", P()),
+    (r"moe/(up|gate)", P(TP, FSDP, None)),
+    (r"moe/down", P(TP, None, FSDP)),
+    (r"moe/shared/(up|gate)/w", P(FSDP, TP)),
+    (r"moe/shared/down/w", P(TP, FSDP)),
+] + _DENSE
+
+_RWKV = [
+    # gates (wg, cm.wr) multiply replicated values elementwise — sharding
+    # their outputs forced (B,S,D) regathers (§Perf R2); keep replicated.
+    (r"tm/wg/w", P(FSDP, None)),
+    (r"cm/wr/w", P(FSDP, None)),
+    (r"tm/(wr|wk|wv)/w", P(FSDP, TP)),
+    (r"tm/wo/w", P(TP, FSDP)),
+    (r"cm/wk/w", P(FSDP, TP)),
+    (r"cm/wv/w", P(TP, FSDP)),
+    (r"embed/table", P(TP, FSDP)),
+    (r"lm_head/w", P(FSDP, TP)),
+]
+
+_HYBRID = [
+    (r"mamba/in_proj/w", P(FSDP, TP)),
+    (r"mamba/conv_w", P(None, TP)),
+    (r"mamba/conv_b", P(TP)),
+    (r"mamba/x_proj/w", P(TP, None)),
+    (r"mamba/dt_proj/(w|b)", P(None, TP)),
+    (r"mamba/A_log", P(TP, None)),
+    (r"mamba/D", P(TP)),
+    (r"mamba/out_proj/w", P(TP, FSDP)),
+] + _DENSE
+
+FAMILY_RULES: Dict[str, List[Tuple[str, P]]] = {
+    "dense": _DENSE,
+    "vlm": _DENSE,
+    "encdec": _DENSE,
+    "moe": _MOE,
+    "rwkv": _RWKV,
+    "hybrid": _HYBRID,
+    "spikingformer": [],
+    "cifarnet": [],
+}
+
+
+def rules_for(cfg: ModelConfig, mesh: Optional[Mesh] = None,
+              scheme: str = "fsdp") -> List[Tuple[str, P]]:
+    """Param-sharding rules for a family under a scheme.
+
+    scheme='fsdp'  — weights sharded over ('data','model'): minimal memory,
+                     per-layer all-gathers (ZeRO-3-like). Baseline.
+    scheme='zero1' — weights resident (TP over 'model' only); optimizer
+                     states stay FSDP-sharded (launch passes scheme='fsdp'
+                     for the opt-state spec assignment). Eliminates the
+                     per-layer weight gathers; requires params+grads to fit
+                     (not kimi-k2 at 256 chips — see EXPERIMENTS §Perf).
+
+    Refinement (both schemes): when the KV heads can't shard over the
+    model axis (GQA kv < model size), wk/wv outputs are REPLICATED instead
+    of column-sharded — the (B,S,KH,hd) reshape would otherwise split a
+    head across shards and GSPMD inserts per-layer activation all-gathers
+    (measured: 8 x f32[16,4096,1,112] gathers/layer on kimi-k2).
+    """
+    rules = list(FAMILY_RULES[cfg.family])
+    model_size = mesh.shape.get(TP, 1) if mesh is not None else 16
+    if cfg.family in ("dense", "moe", "vlm", "hybrid") and \
+            cfg.num_kv_heads % model_size != 0:
+        rules = [(r"(wk|wv)/(w|b)", P(FSDP, None))] + rules
+    if scheme == "zero1":
+        def strip_fsdp(spec: P) -> P:
+            parts = []
+            for part in spec:
+                if part == FSDP:
+                    parts.append(None)
+                elif isinstance(part, tuple):
+                    kept = tuple(a for a in part if a != FSDP)
+                    parts.append(kept if len(kept) > 1 else
+                                 (kept[0] if kept else None))
+                else:
+                    parts.append(part)
+            return P(*parts)
+        rules = [(rx, strip_fsdp(spec)) for rx, spec in rules]
+    return rules
+
+
+def params_partition(cfg: ModelConfig, abstract_params, mesh: Mesh,
+                     scheme: str = "fsdp"):
+    """PartitionSpec tree for a (possibly abstract) param pytree."""
+    return param_specs(abstract_params, rules_for(cfg, mesh, scheme),
+                       default=P(), mesh=mesh)
+
+
+def tree_shardings(spec_tree, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def batch_axes(shape: RunShape, mesh: Mesh) -> Tuple[str, ...]:
+    """DP axes for this run shape; decode batch=1 stays replicated."""
+    axes, prod = [], 1
+    for a in BATCH:
+        if a in mesh.axis_names:
+            n = mesh.shape[a]
+            if shape.global_batch % (prod * n) == 0:
+                axes.append(a)
+                prod *= n
+    return tuple(axes)
+
+
+def batch_partition(cfg: ModelConfig, shape: RunShape, mesh: Mesh,
+                    batch_tree) -> Any:
+    """Spec tree for a data batch (tokens / embeds / labels / images)."""
+    dp = batch_axes(shape, mesh)
+    dp_part = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def assign(path, leaf):
+        nd = len(leaf.shape)
+        return P(*((dp_part,) + (None,) * (nd - 1))) if nd else P()
+
+    return jax.tree_util.tree_map_with_path(assign, batch_tree)
+
+
+_CACHE_RULES_BASE = [
+    (r"(^|/)(k|v)$", P(None, BATCH, "__SEQ__", TP, None)),
+    (r"cross_(k|v)$", P(None, BATCH, None, TP, None)),
+    (r"(^|/)pos$", P()),
+    (r"wkv$", P(None, BATCH, None, None, None)),
+    (r"tm_prev$", P(None, BATCH, None)),
+    (r"cm_prev$", P(None, BATCH, None)),
+    (r"ssm$", P(None, BATCH, TP, None)),
+    (r"conv$", P(None, BATCH, None, TP)),
+]
+
+
+def cache_partition(cfg: ModelConfig, shape: RunShape, mesh: Mesh,
+                    abstract_cache) -> Any:
+    """Spec tree for the decode cache. For long-context decode (batch too
+    small to shard) the KV sequence dim is sharded over 'data' instead —
+    sequence-parallel KV (DESIGN.md §6)."""
+    dp = batch_axes(shape, mesh)
+    seq_shard = None
+    if shape.global_batch < mesh.shape.get("data", 1):
+        seq_shard = FSDP  # long_500k: shard the 500k cache over 'data'
+
+    def materialize(spec: P) -> P:
+        parts = []
+        for part in spec:
+            if part == "__SEQ__":
+                parts.append(seq_shard)
+            elif part == BATCH:
+                parts.append(dp if len(dp) > 1 else
+                             (dp[0] if dp else None))
+            else:
+                parts.append(part)
+        return P(*parts)
+
+    rules = [(rx, materialize(spec)) for rx, spec in _CACHE_RULES_BASE]
+    return param_specs(abstract_cache, rules, default=P(), mesh=mesh)

@@ -1,0 +1,3 @@
+from .fault_tolerance import (FailureInjector, StragglerMonitor,
+                              TrainSupervisor, SimulatedFailure)
+from .elastic import elastic_restore_plan, reshard_tree

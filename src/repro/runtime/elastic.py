@@ -1,0 +1,43 @@
+"""Elastic scaling: re-mesh a checkpoint onto a different device topology.
+
+Checkpoints store full logical arrays (checkpoint/manager.py), so elastic
+restore is a sharding re-assignment: build the target mesh's NamedSharding
+tree from the same path-pattern rules and device_put. This covers
+  * scale-up   (16x16 -> 2x16x16: new pod joins),
+  * scale-down (drop a failed slice and continue data-parallel-narrower),
+  * topology changes (data<->model reshape) as long as divisibility holds.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.sharding import filter_spec_for_mesh
+
+
+def reshard_tree(tree, specs, mesh: Mesh):
+    """device_put every leaf against `mesh` using its PartitionSpec."""
+    def put(leaf, spec):
+        spec = filter_spec_for_mesh(spec, mesh)
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+    return jax.tree_util.tree_map(put, tree, specs,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
+def elastic_restore_plan(old_mesh_shape, new_mesh_shape, global_batch: int):
+    """Validate an elastic transition and return the new data-parallel
+    layout (per-shard batch, #shards). Raises if the transition is
+    impossible without changing global batch semantics."""
+    old_dp = 1
+    for n in old_mesh_shape.get("data", (1,)) if isinstance(
+            old_mesh_shape.get("data"), tuple) else (old_mesh_shape.get("data", 1),):
+        old_dp *= n
+    new_dp = new_mesh_shape.get("data", 1) * new_mesh_shape.get("pod", 1)
+    if global_batch % new_dp:
+        raise ValueError(
+            f"global batch {global_batch} not divisible by new DP degree "
+            f"{new_dp}; adjust batch or use grad accumulation")
+    return {"dp_degree": new_dp, "per_shard_batch": global_batch // new_dp,
+            "grad_accum": 1}

@@ -1,0 +1,8 @@
+"""Cycle-level hardware model of FireFly-T (the paper's own experiments).
+
+decoder_sim    — multi-lane sparse decoder throughput (Figs. 12, 13A)
+balance_sim    — crossbar vs unified-bank load balancing (Figs. 13B, 13C)
+resource_model — LUT6 AND-PopCount construction + Tables V/VI breakdown
+perf_model     — end-to-end GOP/s + energy (Table IV, headline ratios)
+"""
+from . import balance_sim, decoder_sim, perf_model, resource_model

@@ -1,0 +1,157 @@
+"""Load-balancing simulator: crossbar-banked vs unified wide bank (paper
+§IV-A2 and §V-C, Fig. 7 / Fig. 13B-C).
+
+Crossbar baseline (LoAS-style [22]): kernel-weight channel chunks are
+round-robin distributed over ``B_m`` banks of width W. Each of the
+``P = P_Ts x P_Fx`` PEs walks its own spike bitmap; for every chunk with a
+non-zero it must fetch that chunk from bank ``chunk % B_m``. Per cycle a
+bank serves ONE address (PEs requesting the same bank+address share the
+grant — broadcast); different addresses on the same bank serialize.
+Because all PEs process the *same* kernel window over different pixels,
+weight reuse makes conflicts systematic as P grows.
+
+Ours: ONE bank of width ``B_m x W`` broadcasts chunk ``j`` to all PEs
+simultaneously; each PE extracts its non-zeros with decoder throughput G
+(Observation 1: per-chunk popcounts are nearly uniform across the grid, so
+the broadcast rarely stalls; Observation 2: one wide vector beats several
+narrow ones). Advance when the slowest PE finishes:
+``cycles_j = max_pe max(1, ceil(pc[pe, j] / G))``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+
+def spike_chunks(n_pes: int, n_chunks: int, chunk_bits: int, sparsity: float,
+                 rng: np.random.Generator,
+                 grid_std_frac: float = 0.03) -> np.ndarray:
+    """Popcount per (PE, chunk) under **Observation 1**: sparsity within a
+    kernel window is stable across the P_Ts x P_Fx grid — the paper
+    measures a cross-grid standard deviation of ~3% of the theoretical
+    maximum (Fig. 7B). We model a shared per-chunk base popcount plus
+    small per-PE jitter with that std."""
+    base = rng.binomial(chunk_bits, 1.0 - sparsity, size=n_chunks)
+    jitter = rng.normal(0.0, grid_std_frac * chunk_bits,
+                        size=(n_pes, n_chunks))
+    pc = np.clip(np.rint(base[None, :] + jitter), 0, chunk_bits)
+    return pc.astype(np.int64)
+
+
+def crossbar_latency(pc: np.ndarray, n_banks: int, throughput: int,
+                     max_share: int = 8) -> int:
+    """Cycle-accurate crossbar sim (Fig. 7A baseline, LoAS-style [22]).
+
+    pc: (P, n_chunks) popcounts. Each PE walks its bitmap in chunk order;
+    extracting the non-zeros of chunk ``j`` takes ``ceil(pc/G)`` cycles and
+    the PE must hold a grant from bank ``j % n_banks`` on EVERY extraction
+    cycle (weights stream from the bank as indices decode — the data-reuse
+    pressure the paper identifies). A bank serves one address per cycle;
+    PEs on the same address share the grant up to the crossbar's multicast
+    fan-out ``max_share`` (modeling assumption: real all-to-all
+    interconnects have bounded fan-out; 8 calibrates the paper's 70.68%
+    scaling-degradation anchor to within 0.5pp — see EXPERIMENTS.md for
+    the calibration table and the one anchor that deviates). Arbitration
+    is oldest-first (fair), the friendliest choice for the baseline.
+    """
+    n_pes, n_chunks = pc.shape
+    cyc_need = np.maximum(1, -(-pc // throughput))  # (P, n_chunks)
+    ptr = np.zeros(n_pes, dtype=np.int64)           # current chunk per PE
+    left = np.array([cyc_need[p, 0] for p in range(n_pes)])
+    wait = np.zeros(n_pes, dtype=np.int64)          # age for fair arbiter
+    done = np.zeros(n_pes, dtype=bool)
+    cycle = 0
+    while not done.all():
+        # group active PEs by (bank, address)
+        requests = {}
+        for p in np.nonzero(~done)[0]:
+            j = ptr[p]
+            requests.setdefault((j % n_banks, j), []).append(p)
+        # per bank: grant the address with the oldest waiting PE
+        by_bank = {}
+        for (bank, addr), pes in requests.items():
+            age = max(wait[p] for p in pes)
+            cur = by_bank.get(bank)
+            if cur is None or age > cur[0]:
+                by_bank[bank] = (age, addr, pes)
+        granted = set()
+        for bank, (_, addr, pes) in by_bank.items():
+            pes = sorted(pes, key=lambda p: -wait[p])[:max_share]
+            for p in pes:
+                granted.add(p)
+                left[p] -= 1
+                wait[p] = 0
+                if left[p] == 0:
+                    ptr[p] += 1
+                    if ptr[p] >= n_chunks:
+                        done[p] = True
+                    else:
+                        left[p] = cyc_need[p, ptr[p]]
+        for p in np.nonzero(~done)[0]:
+            if p not in granted:
+                wait[p] += 1
+        cycle += 1
+    return cycle
+
+
+def unified_latency(pc: np.ndarray, throughput: int,
+                    width_scale: int = 1) -> int:
+    """Unified wide-bank broadcast sim.
+
+    ``width_scale`` merges that many chunks into one broadcast word (equal
+    total bandwidth to a crossbar with width_scale banks).
+    """
+    n_pes, n_chunks = pc.shape
+    if width_scale > 1:
+        pad = (-n_chunks) % width_scale
+        if pad:
+            pc = np.concatenate([pc, np.zeros((n_pes, pad), pc.dtype)], 1)
+        pc = pc.reshape(n_pes, -1, width_scale).sum(axis=2)
+    cycles = np.maximum(1, -(-pc // throughput))   # (P, n_words)
+    return int(cycles.max(axis=0).sum())
+
+
+@dataclass(frozen=True)
+class BalanceResult:
+    crossbar_cycles: int
+    unified_cycles: int
+
+    @property
+    def speedup(self) -> float:
+        return self.crossbar_cycles / self.unified_cycles
+
+
+def compare(n_pes: int = 16, n_banks: int = 4, throughput: int = 4,
+            n_chunks: int = 512, chunk_bits: int = 16,
+            sparsity: float = 0.75, seed: int = 0,
+            match_bandwidth: bool = True) -> BalanceResult:
+    """Fig. 13B point: crossbar with ``n_banks`` banks vs our single bank
+    scaled to the same total bandwidth (width_scale = n_banks)."""
+    rng = np.random.default_rng(seed)
+    pc = spike_chunks(n_pes, n_chunks, chunk_bits, sparsity, rng)
+    xb = crossbar_latency(pc, n_banks, throughput)
+    ours = unified_latency(pc, throughput,
+                           width_scale=n_banks if match_bandwidth else 1)
+    return BalanceResult(xb, ours)
+
+
+def scaling_curve(pe_counts=(1, 2, 4, 8, 16, 32, 64, 128),
+                  n_banks: int = 8, throughput: int = 4,
+                  n_chunks: int = 256, chunk_bits: int = 16,
+                  sparsity: float = 0.75, seed: int = 0):
+    """Fig. 13C: normalized per-PE throughput vs P_Ts*P_Fx for both
+    schemes (1.0 at P=1). Returns (ours, crossbar) dicts."""
+    ours, xbar = {}, {}
+    for p in pe_counts:
+        rng = np.random.default_rng(seed)
+        pc = spike_chunks(p, n_chunks, chunk_bits, sparsity, rng)
+        u = unified_latency(pc, throughput)
+        x = crossbar_latency(pc, n_banks, throughput)
+        # per-PE performance: total work fixed per PE, so 1/latency
+        ours[p] = 1.0 / u
+        xbar[p] = 1.0 / x
+    u0, x0 = ours[pe_counts[0]], xbar[pe_counts[0]]
+    return ({p: v / u0 for p, v in ours.items()},
+            {p: v / x0 for p, v in xbar.items()})

@@ -1,0 +1,234 @@
+"""End-to-end throughput / energy model (Table IV reproduction).
+
+Computes FireFly-T's effective GOP/s, GOP/s/W and GOP/s/DSP for CIFAR-Net,
+Spikingformer-4-256 and Spikingformer-8-512 from:
+
+  * per-layer workloads enumerated from the network definitions,
+  * the sparse-engine cycle model (words x E[max(1, ceil(pc/G))] with the
+    binomial spike model at the layer's sparsity),
+  * the dual-engine latency-hiding schedule (attention cycles overlap the
+    Q/K/V projections; residual non-hidden cycles are charged),
+  * a power model calibrated on the paper's two implied operating points
+    (G=2: 3.71 W, G=4: 4.35 W) using the 1 DSP ~ 86 LUT equivalence [40].
+
+Baselines (FireFly v2, SpikeTA, DeepFire2, ...) enter as their published
+Table IV numbers; the reproduced ratios are the paper's headline claims:
+1.39x / 2.40x energy efficiency and 4.21x / 7.10x DSP efficiency.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .resource_model import HardwareConfig, resource_breakdown
+
+# ---------------------------------------------------------------------------
+# layer workload enumeration
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    name: str
+    macs: float                 # dense-equivalent MACs (per timestep)
+    words: float                # P_Ci-bit input words to decode (per ts)
+    sparsity: float             # spike sparsity of the layer's input
+    is_attention: bool = False  # binary-engine op (QK^T / QK^TV)
+
+
+def conv_layer(name, fh, fw, cin, cout, k, sparsity, p_ci):
+    macs = fh * fw * cin * cout * k * k
+    words = fh * fw * k * k * max(1, cin // p_ci)
+    return LayerSpec(name, macs, words, sparsity)
+
+
+def linear_layer(name, l, cin, cout, sparsity, p_ci):
+    return LayerSpec(name, l * cin * cout, l * max(1, cin // p_ci), sparsity)
+
+
+def attn_layer(name, l, d, sparsity):
+    # QK^T + QK^TV per head-group handled by the binary engine
+    return LayerSpec(name, 2 * l * l * d, 0, sparsity, is_attention=True)
+
+
+def cifarnet_layers(p_ci: int) -> List[LayerSpec]:
+    """3x32x32-32c3-256c3-256c3-mp2-256c3-256c3-256c3-mp2-512c3-mp2-1024c3."""
+    spec = [(32, 32, 3, 32, 0.70), (32, 32, 32, 256, 0.86),
+            (32, 32, 256, 256, 0.90), (16, 16, 256, 256, 0.88),
+            (16, 16, 256, 256, 0.92), (16, 16, 256, 256, 0.92),
+            (8, 8, 256, 512, 0.93), (4, 4, 512, 1024, 0.94)]
+    return [conv_layer(f"conv{i}", fh, fw, ci, co, 3, s, p_ci)
+            for i, (fh, fw, ci, co, s) in enumerate(spec)]
+
+
+def spikingformer_layers(blocks: int, d: int, l: int, img: int,
+                         p_ci: int) -> List[LayerSpec]:
+    """SPS stem + encoder blocks (QKV/proj/MLP linears + attention)."""
+    layers: List[LayerSpec] = []
+    # SPS ladder (channels d/8 -> d, pools towards l tokens)
+    chans = [3, d // 8, d // 4, d // 2, d]
+    res = img
+    for i in range(4):
+        layers.append(conv_layer(f"sps{i}", res, res, chans[i], chans[i + 1],
+                                 3, 0.80 if i else 0.50, p_ci))
+        if (img == 32 and i >= 2) or (img == 224):
+            res //= 2
+    for b in range(blocks):
+        s = 0.78 + 0.08 * (b / max(1, blocks - 1))   # Fig. 11-like profile
+        for nm in ("q", "k", "v"):
+            layers.append(linear_layer(f"blk{b}.{nm}", l, d, d, s, p_ci))
+        layers.append(attn_layer(f"blk{b}.attn", l, d, 0.9))
+        layers.append(linear_layer(f"blk{b}.proj", l, d, d, 0.88, p_ci))
+        layers.append(linear_layer(f"blk{b}.mlp1", l, d, 4 * d, s, p_ci))
+        layers.append(linear_layer(f"blk{b}.mlp2", l, 4 * d, d, 0.85, p_ci))
+    return layers
+
+
+NETWORKS: Dict[str, Dict] = {
+    "cifarnet": dict(layers=lambda hw: cifarnet_layers(hw.p_ci),
+                     time_steps=4, img=32,
+                     input_macs_per_frame=None),
+    "spikingformer-4-256": dict(
+        layers=lambda hw: spikingformer_layers(4, 256, 64, 32, hw.p_ci),
+        time_steps=4, img=32),
+    "spikingformer-8-512": dict(
+        layers=lambda hw: spikingformer_layers(8, 512, 196, 224, hw.p_ci),
+        time_steps=4, img=224),
+}
+
+
+# ---------------------------------------------------------------------------
+# cycle model
+# ---------------------------------------------------------------------------
+
+
+def _binom_pmf(p_ci: int, q: float) -> np.ndarray:
+    ks = np.arange(p_ci + 1)
+    logc = (np.vectorize(math.lgamma)(p_ci + 1) -
+            np.vectorize(math.lgamma)(ks + 1) -
+            np.vectorize(math.lgamma)(p_ci - ks + 1))
+    with np.errstate(divide="ignore"):
+        logp = logc + ks * np.log(max(q, 1e-12)) + \
+            (p_ci - ks) * np.log(max(1 - q, 1e-12))
+    return np.exp(logp)
+
+
+def word_cycles(p_ci: int, g: int, sparsity: float,
+                straggler_frac: float = 0.05) -> float:
+    pmf = _binom_pmf(p_ci, 1.0 - sparsity)
+    ks = np.arange(p_ci + 1)
+    cyc = np.maximum(1, np.ceil(ks / g))
+    return float((pmf * cyc).sum() * (1.0 + straggler_frac))
+
+
+@dataclass
+class PerfResult:
+    network: str
+    total_gops_per_frame: float     # dense-equivalent GOP per inference
+    cycles_per_frame: float
+    gops: float                     # effective GOP/s
+    fps: float
+    power_w: float
+    energy_eff: float               # GOP/s/W
+    dsps: int
+    dsp_eff: float                  # GOP/s/DSP
+    hidden_attention_frac: float    # fraction of attention cycles hidden
+
+
+def power_model(hw: HardwareConfig,
+                include_binary: bool = True) -> Tuple[float, float, int]:
+    """Calibrated: P = 3.0 + 0.027 * (kLUT + 0.086 * 0.33 * DSP) W.
+
+    Returns (power_w, kluts, dsps). Networks without attention (CIFAR-Net)
+    exclude the binary engine (the overlay gates it off)."""
+    br = resource_breakdown(hw)
+    if not include_binary:
+        br = {k: v for k, v in br.items() if k != "binary_engine"}
+    kluts = sum(v["kluts"] for v in br.values())
+    dsps = int(sum(v["dsps"] for v in br.values()))
+    p = 3.0 + 0.027 * (kluts + 0.086 * 0.33 * dsps)
+    return p, kluts, dsps
+
+
+# per-family pipeline/DMA overhead (calibrated on Table IV FPS anchors)
+_OVERHEAD = {"conv": 0.04, "transformer": 0.22}
+
+
+def evaluate(network: str, hw: Optional[HardwareConfig] = None) -> PerfResult:
+    hw = hw or HardwareConfig()
+    net = NETWORKS[network]
+    layers = net["layers"](hw)
+    ts = net["time_steps"]
+
+    total_macs = 0.0
+    sparse_cycles = 0.0
+    attn_cycles_raw = 0.0
+    proj_cycles_for_overlap = 0.0
+    p_b = hw.p_bm * hw.p_bn * hw.p_bk
+    for layer in layers:
+        total_macs += ts * layer.macs
+        if layer.is_attention:
+            attn_cycles_raw += ts * layer.macs / p_b
+        else:
+            co_tiles = max(1.0, layer.macs / layer.words / hw.p_ci / hw.p_co) \
+                if layer.words else 1.0
+            wc = word_cycles(hw.p_ci, hw.g, layer.sparsity)
+            cyc = ts * layer.words * wc * co_tiles / hw.p_tsfx
+            sparse_cycles += cyc
+            if ".q" in layer.name or ".k" in layer.name or \
+                    ".v" in layer.name:
+                proj_cycles_for_overlap += cyc
+
+    # latency hiding: attention overlaps the Q/K/V projections
+    hidden = min(attn_cycles_raw, proj_cycles_for_overlap)
+    visible_attn = attn_cycles_raw - hidden
+    has_attn = attn_cycles_raw > 0
+    overhead = _OVERHEAD["transformer" if has_attn else "conv"]
+    total_cycles = (sparse_cycles + visible_attn) * (1.0 + overhead)
+    hidden_frac = (hidden / attn_cycles_raw) if attn_cycles_raw else 1.0
+
+    t_frame = total_cycles / (hw.freq_mhz * 1e6)
+    gop_frame = 2.0 * total_macs / 1e9
+    gops = gop_frame / t_frame
+    power, _, dsps = power_model(hw, include_binary=has_attn)
+    return PerfResult(network, gop_frame, total_cycles, gops, 1.0 / t_frame,
+                      power, gops / power, dsps, gops / dsps, hidden_frac)
+
+
+# published Table IV baselines (GOP/s/W, GOP/s/DSP)
+PUBLISHED = {
+    "firefly_v2_cifar": dict(energy_eff=702.74, dsp_eff=6.73),
+    "firefly_v2_imagenet": dict(energy_eff=633.33, dsp_eff=6.06),
+    "spiketa_imagenet": dict(energy_eff=403.99, dsp_eff=4.04),
+    "spiketa_cifar": dict(energy_eff=408.57, dsp_eff=3.99),
+    "deepfire2_imagenet": dict(energy_eff=447.00, dsp_eff=3.90),
+    "heatvit": dict(energy_eff=46.82, dsp_eff=0.22),
+    "ssr": dict(energy_eff=246.15, dsp_eff=6.06),
+    # paper-reported FireFly-T rows (for model-vs-paper deltas)
+    "fireflyt_cifarnet": dict(gops=3630, energy_eff=978.61, dsp_eff=28.35),
+    "fireflyt_sf4_256": dict(gops=3029, energy_eff=696.64, dsp_eff=9.96),
+    "fireflyt_sf8_512": dict(gops=3397, energy_eff=781.13, dsp_eff=11.11),
+}
+
+
+def headline_ratios() -> Dict[str, float]:
+    """The abstract's claims, from OUR model vs published baselines.
+
+    The paper's 1.39x/2.40x (energy) and 4.21x/7.10x (DSP) compare
+    FireFly-T's best row (CIFAR-Net, G=2) against FireFly v2's and
+    SpikeTA's best rows respectively (978.61/702.74 = 1.39,
+    978.61/408.57 = 2.40, 28.35/6.73 = 4.21, 28.35/3.99 = 7.10)."""
+    cifar = evaluate("cifarnet", HardwareConfig(g=2))
+    return {
+        "energy_vs_fireflyv2": cifar.energy_eff /
+        PUBLISHED["firefly_v2_cifar"]["energy_eff"],
+        "energy_vs_spiketa": cifar.energy_eff /
+        PUBLISHED["spiketa_cifar"]["energy_eff"],
+        "dsp_vs_fireflyv2": cifar.dsp_eff /
+        PUBLISHED["firefly_v2_cifar"]["dsp_eff"],
+        "dsp_vs_spiketa": cifar.dsp_eff /
+        PUBLISHED["spiketa_cifar"]["dsp_eff"],
+    }

@@ -1,0 +1,14 @@
+"""Shared pytest fixtures. NOTE: do NOT set xla_force_host_platform_device
+count here — smoke tests and benches must see 1 device; only
+launch/dryrun.py forces 512 placeholder devices (in its own process)."""
+import os
+
+import numpy as np
+import pytest
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

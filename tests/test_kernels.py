@@ -1,0 +1,124 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps (interpret mode
+on CPU; the same pallas_call compiles to Mosaic on TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bitpack import pack_bits
+from repro.kernels import ops, ref
+from repro.kernels.spike_attention import spike_attention as attn_raw
+from repro.kernels.spike_matmul import spike_matmul as matmul_raw
+from repro.kernels.lif import lif_forward
+
+
+def _spikes(key, shape, p=0.25, dtype=jnp.float32):
+    return (jax.random.uniform(key, shape) < p).astype(dtype)
+
+
+@pytest.mark.parametrize("l,d,blk", [(64, 32, 32), (128, 64, 64),
+                                     (256, 128, 128), (96, 48, 32)])
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_spike_attention_sweep(l, d, blk, causal, dtype):
+    if l % blk:
+        pytest.skip("block must divide L")
+    ks = jax.random.split(jax.random.PRNGKey(l + d), 3)
+    q, k, v = (_spikes(kk, (4, l, d), dtype=dtype) for kk in ks)
+    out = attn_raw(q, k, v, scale=1 / np.sqrt(d), delta=0.3, causal=causal,
+                   block_q=blk, block_k=blk)
+    want = ref.spike_attention_ref(q.reshape(4, 1, l, d),
+                                   k.reshape(4, 1, l, d),
+                                   v.reshape(4, 1, l, d),
+                                   scale=1 / np.sqrt(d), delta=0.3,
+                                   causal=causal).reshape(4, l, d)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_spike_attention_no_binarize_matches_raw_scores_times_v():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (_spikes(kk, (2, 64, 32)) for kk in ks)
+    out = attn_raw(q, k, v, scale=0.5, delta=0.0, causal=False,
+                   binarize_scores=False, block_q=32, block_k=32)
+    want = ref.spike_attention_ref(q[:, None], k[:, None], v[:, None],
+                                   scale=0.5, delta=0.0, causal=False,
+                                   binarize_scores=False)[:, 0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5)
+
+
+def test_spike_attention_ops_layout_and_grads():
+    b, l, h, d = 2, 64, 3, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q, k, v = (_spikes(kk, (b, l, h, d)) for kk in ks)
+    out = ops.spike_attention(q, k, v, scale=1 / np.sqrt(d), delta=0.2,
+                              causal=True)
+    want = ref.spike_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), scale=1 / np.sqrt(d), delta=0.2,
+        causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5)
+    g = jax.grad(lambda q: ops.spike_attention(
+        q, k, v, scale=1 / np.sqrt(d), delta=0.2, causal=True).sum())(q)
+    assert np.isfinite(np.asarray(g)).all()
+    assert float(jnp.abs(g).sum()) > 0
+
+
+@pytest.mark.parametrize("m,k,n,bm,bn,bk", [
+    (128, 256, 192, 32, 64, 32), (64, 64, 64, 64, 64, 64),
+    (256, 128, 128, 128, 128, 128), (96, 160, 64, 32, 32, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_spike_matmul_sweep(m, k, n, bm, bn, bk, dtype):
+    key1, key2 = jax.random.split(jax.random.PRNGKey(m + n))
+    s = _spikes(key1, (m, k))
+    w = jax.random.normal(key2, (k, n), dtype)
+    got = matmul_raw(s, w, block_m=bm, block_n=bn, block_k=bk)
+    want = ref.spike_matmul_ref(s, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+                               atol=1e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_spike_matmul_skips_zero_blocks_correctly():
+    s = _spikes(jax.random.PRNGKey(0), (128, 256))
+    s = s.at[:, 64:192].set(0.0)  # two zero K-stripes
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 64))
+    got = ops.spike_matmul(s, w, block_m=64, block_n=64, block_k=64)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.spike_matmul_ref(s, w)),
+                               rtol=1e-5, atol=1e-5)
+    from repro.kernels.spike_matmul import block_occupancy
+    occ = block_occupancy(s, 64, 64)
+    assert not occ[:, 1].any() and not occ[:, 2].any()
+
+
+@pytest.mark.parametrize("t,m,d", [(4, 64, 128), (2, 256, 512), (8, 32, 64)])
+@pytest.mark.parametrize("soft", [False, True])
+def test_lif_kernel_sweep(t, m, d, soft):
+    x = jax.random.normal(jax.random.PRNGKey(t * d), (t, m, d)) * 2
+    got = lif_forward(x, decay=0.5, v_th=1.0, soft_reset=soft,
+                      block_m=min(64, m), block_d=min(128, d))
+    want = ref.lif_ref(x, decay=0.5, v_th=1.0, soft_reset=soft)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_lif_ops_wrapper_arbitrary_dims():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 2, 8, 64))
+    got = ops.lif(x, decay=0.5)
+    want = ref.lif_ref(x.reshape(4, -1, 64), decay=0.5, v_th=1.0,
+                       soft_reset=False).reshape(x.shape)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("l,d", [(64, 64), (128, 128), (64, 256)])
+def test_popcount_scores_sweep(l, d):
+    ks = jax.random.split(jax.random.PRNGKey(l), 2)
+    q = _spikes(ks[0], (3, l, d))
+    k = _spikes(ks[1], (3, l, d))
+    got = ops.popcount_attention_scores(q, k)
+    exact = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(exact))
+    want = ref.popcount_scores_ref(pack_bits(q), pack_bits(k))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

@@ -1,0 +1,90 @@
+"""HLO cost parser: trip-count multiplication, flop counting vs analytic."""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+
+from hlo_cost import HloCost  # noqa: E402
+
+
+def _lower_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_parser_counts_scanned_dots_times_trip():
+    """A scan of N matmuls must count N x the body flops (XLA's own
+    cost_analysis counts the body once — the bug this parser fixes)."""
+    n_layers, m = 8, 64
+    ws = jax.ShapeDtypeStruct((n_layers, m, m), jnp.float32)
+    x0 = jax.ShapeDtypeStruct((4, m), jnp.float32)
+
+    def fn(ws, x):
+        def body(x, w):
+            return x @ w, None
+        x, _ = jax.lax.scan(body, x, ws)
+        return x.sum()
+
+    txt = _lower_text(fn, ws, x0)
+    hc = HloCost(txt)
+    flops, _, _, _, _ = hc.cost()
+    expect = 2 * 4 * m * m * n_layers
+    assert 0.9 * expect <= flops <= 1.3 * expect, (flops, expect)
+
+
+def test_parser_counts_plain_dot():
+    a = jax.ShapeDtypeStruct((32, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 64), jnp.float32)
+    txt = _lower_text(lambda a, b: a @ b, a, b)
+    flops, _, hbm, _, _ = HloCost(txt).cost()
+    assert flops == pytest.approx(2 * 32 * 128 * 64, rel=0.01)
+    # hbm >= operands + output
+    assert hbm >= 4 * (32 * 128 + 128 * 64 + 32 * 64)
+
+
+def test_parser_nested_scan_multiplies():
+    m = 16
+
+    def fn(x):
+        def outer(x, _):
+            def inner(x, _):
+                return x @ jnp.eye(m), None
+            x, _ = jax.lax.scan(inner, x, None, length=3)
+            return x, None
+        x, _ = jax.lax.scan(outer, x, None, length=5)
+        return x.sum()
+
+    txt = _lower_text(fn, jax.ShapeDtypeStruct((m, m), jnp.float32))
+    flops, _, _, _, _ = HloCost(txt).cost()
+    expect = 2 * m ** 3 * 15
+    assert 0.9 * expect <= flops <= 1.4 * expect
+
+
+def test_workload_model_census():
+    sys.path.insert(0, "benchmarks")
+    from workload_model import model_flops, param_census
+    c = param_census("deepseek-moe-16b")
+    assert 14e9 < c["total"] < 20e9          # ~16.4B
+    assert c["active"] < 0.35 * c["total"]   # fine-grained MoE
+    mf = model_flops("deepseek-moe-16b", "train_4k")
+    assert mf["model_flops_global"] > 0
+    # 6ND with N_active ~2.6B, D ~1M tokens => ~1.6e16
+    assert 5e15 < mf["model_flops_global"] < 5e16
+
+
+@pytest.mark.skipif(not os.path.isdir("artifacts/dryrun"),
+                    reason="dry-run artifacts not generated")
+def test_roofline_table_reads_artifacts():
+    import roofline
+    rows = roofline.full_table()
+    ok = [r for r in rows if r.get("status") == "ok"]
+    assert len(ok) >= 30
+    for r in ok:
+        assert r["compute_s"] > 0 and r["memory_s"] > 0
+        assert r["dominant"] in ("compute", "memory", "collective")
+        assert 0 <= r["roofline_frac"] <= 1.5

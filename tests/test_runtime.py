@@ -1,0 +1,99 @@
+"""Fault tolerance, straggler mitigation, elastic restore, end-to-end
+training integration (loss decreases; failure-restart resumes)."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.train import train
+from repro.parallel.sharding import fit_spec_to_shape
+from repro.runtime import (FailureInjector, SimulatedFailure,
+                           StragglerMonitor, TrainSupervisor,
+                           elastic_restore_plan)
+
+
+def test_failure_injector_deterministic():
+    inj = FailureInjector(failure_steps=[3])
+    inj.maybe_fail(2)
+    with pytest.raises(SimulatedFailure):
+        inj.maybe_fail(3)
+    inj.maybe_fail(3)  # only fails once
+    assert inj.injected == [3]
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(threshold=2.0)
+    for i in range(10):
+        mon.observe(i, 0.1)
+    rec = mon.observe(10, 0.5)
+    assert rec.flagged and mon.straggler_steps == [10]
+    # EWMA not poisoned by the outlier
+    assert mon.ewma == pytest.approx(0.1, rel=0.05)
+
+
+def test_supervisor_restart_budget():
+    calls = []
+
+    def seg(start):
+        calls.append(start)
+        if len(calls) < 3:
+            raise SimulatedFailure("boom")
+        return 10
+
+    sup = TrainSupervisor(max_restarts=3)
+    assert sup.run(seg, 0, 10) == 10
+    assert len(sup.restarts) == 2
+
+    sup2 = TrainSupervisor(max_restarts=1)
+
+    def always_fail(start):
+        raise SimulatedFailure("boom")
+    with pytest.raises(RuntimeError):
+        sup2.run(always_fail, 0, 10)
+
+
+def test_elastic_restore_plan():
+    plan = elastic_restore_plan({"data": 16, "model": 16},
+                                {"pod": 2, "data": 16, "model": 16}, 256)
+    assert plan["dp_degree"] == 32 and plan["per_shard_batch"] == 8
+    with pytest.raises(ValueError):
+        elastic_restore_plan({"data": 16}, {"data": 7, "pod": 1}, 256)
+
+
+def test_fit_spec_drops_nondividing_axes():
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("model",))  # 1 device: everything divides
+    s = fit_spec_to_shape(P("model", "data"), (25, 64), mesh)
+    assert s == P("model", None) or s == P("model")  # 'data' not in mesh
+
+
+@pytest.mark.slow
+def test_training_loss_decreases_lm():
+    losses = train("h2o-danube-3-4b", smoke=True, total_steps=30, batch=8,
+                   seq=64, lr=3e-3, ckpt_dir=None, ckpt_every=100,
+                   inject_failure_at=None, compress=False)
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < first - 0.3, (first, last)
+
+
+@pytest.mark.slow
+def test_training_survives_failure_and_resumes():
+    with tempfile.TemporaryDirectory() as d:
+        losses = train("cifarnet", smoke=True, total_steps=14, batch=8,
+                       seq=32, lr=1e-3, ckpt_dir=d, ckpt_every=5,
+                       inject_failure_at=7, compress=False)
+    # 14 nominal steps + replayed steps 5..6 after restore
+    assert len(losses) >= 14
+    assert all(np.isfinite(losses))
+
+
+@pytest.mark.slow
+def test_training_with_grad_compression_close_to_uncompressed():
+    kw = dict(smoke=True, total_steps=25, batch=8, seq=64, lr=3e-3,
+              ckpt_dir=None, ckpt_every=100, inject_failure_at=None)
+    base = train("h2o-danube-3-4b", compress=False, **kw)
+    comp = train("h2o-danube-3-4b", compress=True, **kw)
+    assert abs(np.mean(base[-5:]) - np.mean(comp[-5:])) < 0.25

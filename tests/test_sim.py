@@ -1,0 +1,135 @@
+"""Hardware-simulator anchors: the paper's own experimental claims."""
+import numpy as np
+import pytest
+
+from repro.core.dual_engine import (AttentionWorkload, EngineParallelism,
+                                    complexity_reduction, pipeline_schedule,
+                                    required_binary_parallelism)
+from repro.sim import balance_sim as bs, decoder_sim as ds
+from repro.sim import perf_model as pm
+from repro.sim import resource_model as rm
+
+
+def test_fig12_optimal_pci_tracks_sparsity():
+    """Optimal P_Ci ~= G / (1 - sparsity) (paper: G=4 -> 16 at 75%)."""
+    _, best = ds.sweep_fig12(g_values=(2, 4, 8),
+                             p_ci_values=(4, 8, 16, 32, 64), sparsity=0.75)
+    assert best[2] == 8 and best[4] == 16 and best[8] == 32
+
+
+def test_fig12_max_f_scales_linearly_with_pci():
+    out, best = ds.sweep_fig12(g_values=(2, 4, 8, 16),
+                               p_ci_values=(8, 16, 32, 64), sparsity=0.75)
+    # optimal P_Ci keeps growing with G (no saturation); at G=16 the sim
+    # sits right at the G/(1-s) knee where the ceil penalty makes 32 and
+    # 64 near-equal — accept either ("near-optimal", paper's wording)
+    assert best[16] >= 32
+    assert out[16][64] > 0.9  # 64 within 10% of the G=16 optimum
+
+
+def test_fig13a_two_workers_reach_80pct_of_peak():
+    for g, p_ci in ((4, 16), (8, 32)):
+        r = ds.sweep_fig13a(g, p_ci)
+        assert r[2] / max(r.values()) >= 0.80, (g, r)
+        # monotone improvement with more workers
+        keys = sorted(r)
+        assert all(r[a] <= r[b] * 1.02 for a, b in zip(keys, keys[1:]))
+
+
+def test_decoder_latency_zero_word_costs_one_cycle():
+    cfg = ds.DecoderConfig(p_ci=16, m_lanes=4, p_wo=1)
+    assert ds.simulate_latency(np.zeros(10, int), cfg) == 10
+
+
+def test_fig13c_scaling_ours_beats_crossbar():
+    ours, xbar = bs.scaling_curve()
+    ours_loss = 1 - ours[128]
+    xbar_loss = 1 - xbar[128]
+    # paper: 13.17% vs 70.68%; sim calibration bands
+    assert ours_loss < 0.25, ours_loss
+    assert 0.55 < xbar_loss < 0.90, xbar_loss
+    assert xbar_loss > 3 * ours_loss
+
+
+def test_fig13b_unified_faster_at_equal_bandwidth():
+    for bm in (1, 2, 4, 8):
+        res = bs.compare(n_pes=16, n_banks=bm, throughput=4)
+        assert res.speedup > 1.3, (bm, res)
+
+
+def test_observation1_grid_popcount_correlation():
+    rng = np.random.default_rng(0)
+    pc = bs.spike_chunks(64, 256, 16, 0.75, rng)
+    cross_std = pc.std(axis=0).mean()
+    assert cross_std < 0.06 * 16  # ~3% of theoretical max, paper Fig 7B
+
+
+def test_fig9_lut6_andpopcount_claims():
+    cmp18 = rm.and_popcount_comparison(18)
+    assert cmp18["ours_depth"] == 2            # paper: 5 -> 2 stages
+    assert cmp18["naive_depth"] >= 5
+    assert 0.45 <= cmp18["lut_reduction"] <= 0.60  # paper: 52%
+    # reduction holds across widths
+    for n in (12, 24, 32, 64):
+        c = rm.and_popcount_comparison(n)
+        assert c["ours_luts"] < c["naive_luts"]
+        assert c["ours_depth"] < c["naive_depth"]
+
+
+def test_tableV_dsp_counts():
+    assert rm.sparse_engine_dsps(rm.HardwareConfig(g=4)) == 288
+    assert rm.sparse_engine_dsps(rm.HardwareConfig(g=2)) == 128
+    assert rm.binary_engine_dsps(rm.HardwareConfig()) == 16
+
+
+def test_tableVI_lut_model_within_10pct():
+    hw4 = rm.HardwareConfig(g=4, p_wo=2)
+    hw2 = rm.HardwareConfig(g=2, p_wo=2)
+    assert abs(rm.decoder_luts(hw4) - 1442) / 1442 < 0.10
+    assert abs(rm.decoder_luts(hw2) - 1306) / 1306 < 0.10
+    assert abs(rm.balancer_luts(hw4) - 33536) / 33536 < 0.10
+    assert abs(rm.balancer_luts(hw2) - 17280) / 17280 < 0.10
+
+
+def test_dsp_savings_law():
+    sv = rm.dsp_savings(rm.HardwareConfig(g=2))
+    assert sv["dsps_saved"] == 896 and sv["net_win_luts"] > 0
+    sv4 = rm.dsp_savings(rm.HardwareConfig(g=4))
+    assert sv4["dsps_saved"] == 768
+
+
+def test_tableIV_fireflyt_rows_within_tolerance():
+    cifar = pm.evaluate("cifarnet", rm.HardwareConfig(g=2))
+    assert abs(cifar.gops - 3630) / 3630 < 0.10
+    assert abs(cifar.energy_eff - 978.61) / 978.61 < 0.10
+    sf8 = pm.evaluate("spikingformer-8-512", rm.HardwareConfig(g=4))
+    assert abs(sf8.gops - 3397) / 3397 < 0.15
+    sf4 = pm.evaluate("spikingformer-4-256", rm.HardwareConfig(g=4))
+    assert abs(sf4.gops - 3029) / 3029 < 0.15
+
+
+def test_headline_ratios():
+    r = pm.headline_ratios()
+    assert abs(r["energy_vs_fireflyv2"] - 1.39) < 0.12
+    assert abs(r["energy_vs_spiketa"] - 2.40) < 0.20
+    assert abs(r["dsp_vs_fireflyv2"] - 4.21) < 0.35
+    assert abs(r["dsp_vs_spiketa"] - 7.10) < 0.60
+
+
+def test_eq4_sizing_hides_attention():
+    """Engines sized per Eq. 4 => overlapped time ~= projection time."""
+    w = AttentionWorkload(T_s=4, F_h=14, F_w=14, C_i=512, P_Co=64, heads=8)
+    p = EngineParallelism(P_Ts=2, P_Fx=4, P_Ci=16, P_Co=64,
+                          P_Bm=8, P_Bn=8, P_Bk=32)
+    need = required_binary_parallelism(w, p)
+    assert 0.5 * need <= p.P_b <= 2.5 * need  # the paper's sizing regime
+    _, _, overlapped, serial = pipeline_schedule(w, p)
+    assert overlapped < serial
+    assert overlapped <= 1.25 * 3 * w.heads * (w.W_s() / p.P_s)
+
+
+def test_complexity_reduction_formula():
+    w = AttentionWorkload(T_s=4, F_h=8, F_w=8, C_i=256, P_Co=32, heads=8)
+    serial, overlapped = complexity_reduction(w)
+    assert serial == 3 * 4 * 64 * 256 ** 2 + 2 * 4 * 64 ** 2 * 256
+    assert overlapped == 3 * 4 * 64 * 256 ** 2

@@ -1,0 +1,88 @@
+"""Multi-lane decoder (Eq. 5) bit-exactness + bitmap/bitpack properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import bitpack, sparsity
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 6),
+       st.lists(st.integers(0, 1), min_size=1, max_size=48))
+def test_decode_cycle_extracts_first_m_bits(m, bits):
+    """Lane m one-hot == position of the (m+1)-th set bit (Eq. 5)."""
+    bits = np.array(bits)
+    onehots, remaining = sparsity.multilane_decode_cycle(bits, m)
+    expect = sparsity.naive_first_m_indices(bits, m)
+    got = np.nonzero(onehots.any(axis=0))[0]
+    np.testing.assert_array_equal(got, expect)
+    # lanes fire in order, one position each
+    for lane in range(min(m, len(expect))):
+        assert np.nonzero(onehots[lane])[0].tolist() == [expect[lane]]
+    # remaining = original minus extracted
+    recon = remaining.copy()
+    recon[expect] = True
+    np.testing.assert_array_equal(recon, bits.astype(bool))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 5),
+       st.lists(st.integers(0, 1), min_size=1, max_size=40))
+def test_decode_full_visits_every_bit_once_in_order(m, bits):
+    bits = np.array(bits)
+    cycles, n = sparsity.multilane_decode_full(bits, m)
+    flat = np.concatenate(cycles) if cycles else np.array([])
+    np.testing.assert_array_equal(np.sort(flat), np.nonzero(bits)[0])
+    assert all(np.all(np.diff(c) > 0) for c in cycles)
+    pc = int(bits.sum())
+    assert n == sparsity.decode_cycles_for_word(pc, m)
+
+
+def test_paper_fig6_example():
+    """0x9042 takes 4 cycles single-lane, 1 cycle with M=4 (Fig. 6A)."""
+    bits = np.array([(0x9042 >> i) & 1 for i in range(16)])
+    _, n1 = sparsity.multilane_decode_full(bits, 1)
+    _, n4 = sparsity.multilane_decode_full(bits, 4)
+    assert n1 == 4 and n4 == 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4))
+def test_bitmap_roundtrip(rows, words):
+    rng = np.random.default_rng(rows * 7 + words)
+    spikes = (rng.random((rows, words * 32)) > 0.75).astype(np.float32)
+    enc, pc = sparsity.bitmap_encode(spikes)
+    dec = sparsity.bitmap_decode(enc, words * 32)
+    np.testing.assert_array_equal(dec, spikes)
+    np.testing.assert_array_equal(pc.sum(axis=-1), spikes.sum(axis=-1))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 3))
+def test_jax_bitpack_roundtrip(rows, words):
+    rng = np.random.default_rng(rows + 13 * words)
+    x = (rng.random((rows, words * 32)) > 0.5).astype(np.float32)
+    packed = bitpack.pack_bits(jnp.asarray(x))
+    out = bitpack.unpack_bits(packed, words * 32)
+    np.testing.assert_array_equal(np.asarray(out), x)
+
+
+def test_popcount_matmul_equals_binary_dot():
+    rng = np.random.default_rng(3)
+    a = (rng.random((9, 96)) > 0.7).astype(np.float32)
+    b = (rng.random((11, 96)) > 0.7).astype(np.float32)
+    got = bitpack.popcount_matmul(bitpack.pack_bits(jnp.asarray(a)),
+                                  bitpack.pack_bits(jnp.asarray(b)))
+    np.testing.assert_array_equal(np.asarray(got),
+                                  (a @ b.T).astype(np.int32))
+
+
+def test_block_occupancy():
+    s = np.zeros((4, 64))
+    s[1, 40] = 1
+    occ = sparsity.block_occupancy(s, 32)
+    assert occ.shape == (4, 2)
+    assert occ[1].tolist() == [False, True]
+    assert not occ[0].any()

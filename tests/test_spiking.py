@@ -1,0 +1,69 @@
+"""Spiking core: LIF dynamics, surrogate gradients, encodings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import spiking as S
+
+
+@pytest.mark.parametrize("soft_reset", [False, True])
+@pytest.mark.parametrize("tau", [2.0, 4.0])
+def test_lif_scan_matches_loop(soft_reset, tau):
+    cfg = S.SpikingConfig(time_steps=6, tau=tau, soft_reset=soft_reset)
+    x = jax.random.normal(jax.random.PRNGKey(0), (6, 3, 8))
+    s1, u1 = S.lif_scan(x, cfg)
+    s2, u2 = S.lif_loop_reference(x, cfg)
+    np.testing.assert_allclose(s1, s2, atol=1e-6)
+    np.testing.assert_allclose(u1, u2, atol=1e-5)
+
+
+def test_spikes_are_binary():
+    cfg = S.SpikingConfig(time_steps=4)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 5, 7)) * 3
+    s, _ = S.lif_scan(x, cfg)
+    vals = np.unique(np.asarray(s))
+    assert set(vals).issubset({0.0, 1.0})
+
+
+def test_soft_reset_conserves_leftover_membrane():
+    # soft reset subtracts the threshold: u stays above 0 for big inputs
+    cfg = S.SpikingConfig(time_steps=1, soft_reset=True, v_threshold=1.0)
+    x = jnp.full((1, 1), 2.5)
+    s, u = S.lif_scan(x, cfg)
+    assert float(s[0, 0]) == 1.0
+    np.testing.assert_allclose(float(u[0]), 2.5 - 1.0, rtol=1e-6)
+
+
+def test_hard_reset_zeroes_membrane():
+    cfg = S.SpikingConfig(time_steps=1, soft_reset=False)
+    x = jnp.full((1, 1), 2.5)
+    _, u = S.lif_scan(x, cfg)
+    assert float(u[0]) == 0.0
+
+
+def test_surrogate_gradient_shape_and_peak():
+    g = jax.grad(lambda v: S.spike(v, 4.0).sum())(jnp.array([-2.0, 0.0, 2.0]))
+    assert float(g[1]) == pytest.approx(1.0)  # alpha/4 at 0 with alpha=4
+    assert float(g[0]) < float(g[1]) and float(g[2]) < float(g[1])
+
+
+def test_binarize_threshold_gradient_flows_to_delta():
+    f = lambda d: S.binarize(jnp.linspace(-1, 1, 32), d, 4.0).sum()
+    g = jax.grad(f)(jnp.asarray(0.1))
+    assert np.isfinite(float(g)) and float(g) != 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.0, 1.0), st.integers(1, 8))
+def test_rate_encode_statistics(p, t):
+    x = jnp.full((64, 64), p)
+    s = S.rate_encode(x, t, jax.random.PRNGKey(0))
+    assert s.shape == (t, 64, 64)
+    assert abs(float(s.mean()) - p) < 0.05
+
+
+def test_measure_sparsity():
+    s = jnp.zeros((10, 10)).at[0, :5].set(1.0)
+    assert float(S.measure_sparsity(s)) == pytest.approx(0.95)
