@@ -1,0 +1,136 @@
+"""Dual-engine sweep: dense XLA dot vs occupancy-skipping sparse kernel.
+
+For each (sparsity, block, shape) point this times ``spike_linear``'s two
+dispatch targets on the same spike tensor and records
+
+  * dense_us / sparse_us — wall time per call (median of reps). On CPU
+    the kernel runs in Pallas *interpret* mode, so the wall-clock ratio
+    measures the lowered-lax emulation, not MXU tiles — the number that
+    transfers to TPU is ``modeled_speedup``;
+  * skip_fraction — fraction of (block_m x block_k) spike tiles whose
+    occupancy bit is 0 (the sparse engine skips them: no weight fetch,
+    no MACs);
+  * modeled_speedup — 1 / (1 - skip_fraction), the MAC-count reduction
+    the occupancy map guarantees on any backend.
+
+Spikes are generated with *coherent* tile sparsity (Observation 1: spike
+sparsity is uniform across the spatial-temporal grid, so channel blocks
+go dark together): ``sparsity`` is the fraction of dead tiles; live
+tiles fire at 25% density. That is the regime where whole-tile skips
+pay; i.i.d. Bernoulli sparsity at the same rate almost never yields an
+empty 128x128 tile and is reported by the bench as skip_fraction ~ 0.
+
+Output: ``artifacts/dual_engine_bench.json`` in the benchmark harness's
+``{"rows": [...], "derived": {...}}`` format (also wired into
+``benchmarks/run.py``).
+
+Usage: PYTHONPATH=src python benchmarks/dual_engine_bench.py [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+SHAPES = [(256, 128, 256), (512, 256, 256), (1024, 256, 512)]  # (M, K, N)
+BLOCKS = [64, 128]
+SPARSITIES = [0.5, 0.75, 0.9]
+REPS = 5
+
+
+def coherent_spikes(key, m, k, block, sparsity, density=0.25):
+    """{0,1} (M, K) with ``sparsity`` fraction of (block x block) dead
+    tiles; live tiles fire i.i.d. at ``density``."""
+    k1, k2 = jax.random.split(key)
+    nm, nk = -(-m // block), -(-k // block)
+    live = jax.random.uniform(k1, (nm, nk)) >= sparsity
+    tile_mask = jnp.repeat(jnp.repeat(live, block, 0), block, 1)[:m, :k]
+    fire = jax.random.uniform(k2, (m, k)) < density
+    return (tile_mask & fire).astype(jnp.float32)
+
+
+def _time(fn, *args) -> float:
+    fn(*args).block_until_ready()           # compile + warm
+    ts = []
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        fn(*args).block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2] * 1e6   # median, us
+
+
+def bench(fast: bool = False):
+    from repro.core import engine as E
+    from repro.kernels.spike_matmul import block_occupancy
+
+    shapes = SHAPES[:2] if fast else SHAPES
+    rows = []
+    for m, k, n in shapes:
+        for block in BLOCKS:
+            for sparsity in SPARSITIES:
+                key = jax.random.PRNGKey(m + block + int(sparsity * 100))
+                kw, ks = jax.random.split(key)
+                s = coherent_spikes(ks, m, k, block, sparsity)
+                w = jax.random.normal(kw, (k, n), jnp.float32)
+                p = {"w": w}
+                sparse_eng = E.EngineConfig(mode="sparse", block_m=block,
+                                            block_n=block, block_k=block)
+                dense_us = _time(jax.jit(
+                    lambda s, p=p: E.spike_linear(p, s, engine=E.DENSE)), s)
+                sparse_us = _time(jax.jit(
+                    lambda s, p=p, e=sparse_eng: E.spike_linear(
+                        p, s, engine=e)), s)
+                occ = block_occupancy(s, min(block, m), min(block, k))
+                skip = float(1.0 - occ.mean())
+                tiles = occ.size  # MAC reduction is bounded by the grid
+                rows.append({
+                    "shape": [m, k, n], "block": block,
+                    "sparsity": sparsity,
+                    "measured_sparsity": float(1.0 - s.mean()),
+                    "dense_us": round(dense_us, 1),
+                    "sparse_us": round(sparse_us, 1),
+                    "wall_speedup": round(dense_us / sparse_us, 3),
+                    "skip_fraction": round(skip, 4),
+                    "modeled_speedup": round(
+                        min(1.0 / max(1e-9, 1.0 - skip), float(tiles)), 3),
+                })
+    derived = {
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "points": len(rows),
+        "max_modeled_speedup": max(r["modeled_speedup"] for r in rows),
+        "mean_skip_at_0.9": round(sum(
+            r["skip_fraction"] for r in rows if r["sparsity"] == 0.9) /
+            max(1, sum(1 for r in rows if r["sparsity"] == 0.9)), 4),
+    }
+    return rows, derived
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default="artifacts/dual_engine_bench.json")
+    args = ap.parse_args()
+    rows, derived = bench(fast=args.fast)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"rows": rows, "derived": derived}, f, indent=1)
+    print("shape,block,sparsity,dense_us,sparse_us,wall_speedup,"
+          "skip_fraction,modeled_speedup")
+    for r in rows:
+        print(f"{'x'.join(map(str, r['shape']))},{r['block']},"
+              f"{r['sparsity']},{r['dense_us']},{r['sparse_us']},"
+              f"{r['wall_speedup']},{r['skip_fraction']},"
+              f"{r['modeled_speedup']}")
+    print(json.dumps(derived))
+
+
+if __name__ == "__main__":
+    main()

@@ -41,8 +41,19 @@ _COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*.*\)\s*->.*\{\s*$")
 _CALL_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
 _COND_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
 _TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"(\d+)"')
-_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
 _DOT_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_DOT_RHS_CDIMS_RE = re.compile(r"rhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_names(operand_text: str) -> List[str]:
+    """Operand instruction names from an HLO operand list.
+
+    Operand lists look like ``f32[32,128]{1,0} %Arg_0.1, f32[128,64]{1,0}
+    %Arg_1.2`` — the shape strings contain commas, so splitting on ','
+    mangles the names (the seed bug that zeroed every dot's contraction
+    dim). Each operand reference is the ``%name`` token, so pull those."""
+    return _OPERAND_NAME_RE.findall(operand_text)
 
 
 def _parse_instr(line: str) -> Optional[Tuple[str, str, str]]:
@@ -163,33 +174,6 @@ class HloCost:
             # natively, so convert-fed dot traffic counts at bf16.
             return nm.startswith("convert") and "f32" in shapes.get(nm, "")
 
-        def operand_bytes(l: str) -> float:
-            om = _OPERANDS_RE.search(l[l.find("("):] if "(" in l else l)
-            if not om:
-                return 0.0
-            total = 0.0
-            depth = 0
-            cur = []
-            parts = []
-            for ch in om.group(1):
-                if ch == "(":
-                    depth += 1
-                elif ch == ")":
-                    depth -= 1
-                if ch == "," and depth == 0:
-                    parts.append("".join(cur))
-                    cur = []
-                else:
-                    cur.append(ch)
-            parts.append("".join(cur))
-            for part in parts:
-                nm = part.strip().split()[-1].lstrip("%") if part.strip() \
-                    else ""
-                t = shapes.get(nm)
-                if t:
-                    total += _nbytes(t)
-            return total
-
         for line in lines:
             m = _parse_instr(line)
             if not m:
@@ -206,9 +190,7 @@ class HloCost:
                 any_up = False
                 opb = 0.0
                 if om:
-                    for part in om.group(1).split(","):
-                        nm2 = part.strip().split()[-1].lstrip("%") \
-                            if part.strip() else ""
+                    for nm2 in _operand_names(om.group(1)):
                         t = shapes.get(nm2)
                         if not t:
                             continue
@@ -256,15 +238,20 @@ class HloCost:
                 ops_m = re.search(r"dot\(([^)]*)\)", line)
                 cdims = _DOT_CDIMS_RE.search(line)
                 if out and ops_m and cdims:
-                    lhs_name = ops_m.group(1).split(",")[0].strip()
-                    lhs_name = lhs_name.split()[-1].lstrip("%")
-                    lhs_t = shapes.get(lhs_name)
+                    names = _operand_names(ops_m.group(1))
                     k = 1
-                    if lhs_t:
-                        lhs = _parse_type(lhs_t)
-                        if lhs and cdims.group(1):
-                            for d in cdims.group(1).split(","):
-                                k *= lhs[1][int(d)]
+                    lhs = _parse_type(shapes.get(names[0], "")) if names \
+                        else None
+                    if lhs and cdims.group(1):
+                        for d in cdims.group(1).split(","):
+                            k *= lhs[1][int(d)]
+                    elif len(names) > 1:
+                        # lhs defined out of scope: recover K from the rhs
+                        rhs = _parse_type(shapes.get(names[1], ""))
+                        rdims = _DOT_RHS_CDIMS_RE.search(line)
+                        if rhs and rdims and rdims.group(1):
+                            for d in rdims.group(1).split(","):
+                                k *= rhs[1][int(d)]
                     nout = 1
                     for d in out[1]:
                         nout *= d
@@ -281,9 +268,9 @@ class HloCost:
                     ops_m = re.search(r"convolution\(([^)]*)\)", line)
                     k = 1
                     if ops_m:
-                        rhs_name = ops_m.group(1).split(",")[1].strip()
-                        rhs_name = rhs_name.split()[-1].lstrip("%")
-                        rhs = _parse_type(shapes.get(rhs_name, ""))
+                        names = _operand_names(ops_m.group(1))
+                        rhs = _parse_type(shapes.get(names[1], "")) \
+                            if len(names) > 1 else None
                         if rhs:
                             k = 1
                             for d in rhs[1][:-1]:
@@ -430,8 +417,7 @@ def attribution(path: str, kind: str = "collective", top: int = 12):
             if kind == "hbm" and op == "dot":
                 om = re.search(r"dot\(([^)]*)\)", line)
                 if om:
-                    for part in om.group(1).split(","):
-                        nm = part.strip().split()[-1].lstrip("%")
+                    for nm in _operand_names(om.group(1)):
                         t = shapes.get(nm)
                         if t:
                             b += _nbytes(t)

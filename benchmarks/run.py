@@ -24,6 +24,7 @@ def main() -> None:
     ap.add_argument("--skip-roofline", action="store_true")
     args = ap.parse_args()
 
+    import dual_engine_bench
     import paper_figures as pf
 
     benches = [
@@ -33,6 +34,7 @@ def main() -> None:
         ("table56_resources", pf.table56_resources),
         ("fig5_pipeline", pf.fig5_pipeline),
         ("kernels", pf.kernels_bench),
+        ("dual_engine", lambda: dual_engine_bench.bench(fast=args.fast)),
     ]
     if not args.fast:
         benches.insert(0, ("fig11_sparsity", pf.fig11_sparsity))

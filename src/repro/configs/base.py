@@ -9,6 +9,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
+from repro.core.engine import EngineConfig
 from repro.core.spiking import SpikingConfig
 
 
@@ -92,6 +93,10 @@ class ModelConfig:
     encoder_layers: int = 0          # whisper encoder depth
     encoder_seq: int = 1500          # whisper frame count (stubbed frontend)
     spiking: Optional[SpikingConfig] = None
+    # dual-engine dispatch: step builders install this engine around the
+    # forward pass, routing spike matmuls dense vs block-sparse
+    # (core/engine.py). None = always dense.
+    engine: Optional[EngineConfig] = None
     dtype: str = "bfloat16"
     remat: bool = True
 

@@ -2,6 +2,7 @@
 4 encoder blocks, embedding dim 256, T_s=4, binary attention, pre-neuron
 residuals. Trained with BrainCog in the paper; our spiking substrate
 mirrors its LIF parameterization (core/spiking.py)."""
+from repro.core.engine import EngineConfig
 from repro.core.spiking import SpikingConfig
 from .base import ModelConfig, VisionSpec
 
@@ -11,6 +12,11 @@ CONFIG = ModelConfig(
     d_ff=1024, vocab_size=10,
     vision=VisionSpec(img_size=32, in_channels=3, sps_stages=2),
     spiking=SpikingConfig(time_steps=4),
+    # dual-engine hot path: spike matmuls big enough to tile go through
+    # the occupancy-skipping sparse kernel; the flop floor keeps the CPU
+    # smoke shapes on the dense XLA path (engine dispatch is still
+    # exercised — it just resolves dense there).
+    engine=EngineConfig(mode="auto"),
 )
 
 SMOKE = CONFIG.replace(

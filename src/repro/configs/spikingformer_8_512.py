@@ -1,6 +1,7 @@
 """Spikingformer-8-512 — the paper's ImageNet workload (§V-A):
 8 encoder blocks, embedding dim 512, T_s=4, 224x224 input (14x14 = 196
 tokens after the 4-stage SPS)."""
+from repro.core.engine import EngineConfig
 from repro.core.spiking import SpikingConfig
 from .base import ModelConfig, VisionSpec
 
@@ -10,6 +11,7 @@ CONFIG = ModelConfig(
     d_ff=2048, vocab_size=1000,
     vision=VisionSpec(img_size=224, in_channels=3, sps_stages=4),
     spiking=SpikingConfig(time_steps=4),
+    engine=EngineConfig(mode="auto"),
 )
 
 SMOKE = CONFIG.replace(

@@ -1,0 +1,189 @@
+"""Dual-engine dispatch: dense vs occupancy-skipping execution per matmul.
+
+FireFly-T's overlay couples a *sparse engine* (spike x weight projections,
+zero-skipping) with a *binary engine* (QK^T / QK^T V, AND-PopCount). On
+TPU the binary engine is the fused ``kernels/spike_attention`` call; this
+module is the orchestrator's other half (DESIGN.md §3/§4): every spiking
+matmul — Q/K/V/O projections, the MLP, anything whose input is a {0,1}
+spike tensor — routes through :func:`spike_linear`, which picks per call
+site between
+
+  * ``dense``  — plain XLA dot, fp32 accumulation (the measurement
+    baseline every perf PR compares against), and
+  * ``sparse`` — the block-sparse ``spike_matmul`` Pallas kernel, which
+    skips all-zero (block_m x block_k) spike tiles via the occupancy map
+    (the MXU-granularity multi-lane decode).
+
+Dispatch is *static* (shape/config driven, resolved at trace time): jit
+can't branch on runtime density, so ``auto`` mode uses the flop volume as
+the proxy — tiny matmuls can't amortize occupancy staging and go dense.
+The engine is installed ambiently (thread-local, like sharding rules) by
+the step builders from ``ModelConfig.engine``, so model code stays free
+of engine plumbing. Off-TPU the kernel runs in ``interpret`` mode — the
+bit-exact Python evaluation this container's tests validate against.
+
+The sparse path carries a custom VJP (dense fp32 matmul transposes in
+bwd): spike inputs come from surrogate-gradient LIF neurons, so training
+steps differentiate straight through the dispatch.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Sparse-engine dispatch knobs (per model, set on ModelConfig.engine).
+
+    mode: 'dense' | 'sparse' | 'auto'. 'auto' goes sparse only when the
+      matmul's flop volume clears ``min_flops`` (occupancy staging and
+      per-block control flow need real work to amortize — and it keeps
+      CPU smoke configs on the fast XLA path).
+    block_*: VMEM tile sizes of the kernel; (block_m x block_k) is also
+      the skip granularity.
+    interpret: force Pallas interpret mode (None = auto: off-TPU only).
+    """
+    mode: str = "auto"
+    block_m: int = 128
+    block_n: int = 128
+    block_k: int = 128
+    min_flops: int = 1 << 22
+    interpret: Optional[bool] = None
+
+
+DENSE = EngineConfig(mode="dense")
+SPARSE = EngineConfig(mode="sparse")
+
+_state = threading.local()
+
+
+def set_engine(engine: Optional[EngineConfig]) -> None:
+    _state.engine = engine
+
+
+def get_engine() -> Optional[EngineConfig]:
+    return getattr(_state, "engine", None)
+
+
+class use_engine:
+    """Context manager installing the ambient engine (mirrors
+    sharding.use_rules). ``use_engine(None)`` disables dispatch."""
+
+    def __init__(self, engine: Optional[EngineConfig]):
+        self.engine = engine
+
+    def __enter__(self):
+        self.prev = get_engine()
+        set_engine(self.engine)
+        return self.engine
+
+    def __exit__(self, *exc):
+        set_engine(self.prev)
+
+
+def engine_scope(cfg) -> contextlib.AbstractContextManager:
+    """Engine context for a model config: installs ``cfg.engine`` when the
+    config sets one, otherwise leaves the ambient engine untouched (so a
+    caller-installed engine survives step builders for engine-less
+    configs)."""
+    engine = getattr(cfg, "engine", None)
+    if engine is None:
+        return contextlib.nullcontext()
+    return use_engine(engine)
+
+
+def resolve_mode(engine: Optional[EngineConfig], m: int, k: int, n: int
+                 ) -> str:
+    """Static dense/sparse decision for an (M, K) x (K, N) spike matmul."""
+    if engine is None:
+        return "dense"
+    if engine.mode in ("dense", "sparse"):
+        return engine.mode
+    if engine.mode != "auto":
+        raise ValueError(f"unknown engine mode {engine.mode!r}")
+    return "sparse" if 2 * m * k * n >= engine.min_flops else "dense"
+
+
+# ---------------------------------------------------------------------------
+# sparse path: Pallas kernel fwd, dense-transpose bwd
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _sparse_matmul(s2d, w, b, block_m, block_n, block_k, interpret):
+    from repro.kernels.spike_matmul import spike_matmul  # lazy: no cycle
+    # keep the fp32 accumulator: spike_linear casts once to the
+    # activation dtype, exactly like the dense reference — a w.dtype
+    # round-trip here would break bit-parity for mixed dtypes.
+    return spike_matmul(s2d, w, bias=b, block_m=block_m, block_n=block_n,
+                        block_k=block_k, out_dtype=jnp.float32,
+                        interpret=interpret)
+
+
+def _sparse_fwd(s2d, w, b, block_m, block_n, block_k, interpret):
+    out = _sparse_matmul(s2d, w, b, block_m, block_n, block_k, interpret)
+    return out, (s2d, w, b)
+
+
+def _sparse_bwd(block_m, block_n, block_k, interpret, res, g):
+    s2d, w, b = res
+    g32 = g.astype(jnp.float32)
+    ds = jnp.dot(g32, w.astype(jnp.float32).T,
+                 preferred_element_type=jnp.float32).astype(s2d.dtype)
+    dw = jnp.dot(s2d.astype(jnp.float32).T, g32,
+                 preferred_element_type=jnp.float32).astype(w.dtype)
+    db = None if b is None else g32.sum(axis=0).astype(b.dtype)
+    return ds, dw, db
+
+
+_sparse_matmul.defvjp(_sparse_fwd, _sparse_bwd)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def dense_spike_linear(p: Dict[str, Any], x: jax.Array) -> jax.Array:
+    """The dense reference: fp32-accumulated dot + bias, cast back to the
+    activation dtype — term-for-term what the sparse kernel computes.
+
+    Operands stay in their native dtype (no hoisted upcasts — bf16 feeds
+    the MXU directly and the result is cast back before any collective,
+    preserving the §Perf F1 bf16 traffic); only the accumulator is fp32.
+    """
+    y = jnp.dot(x, p["w"], preferred_element_type=jnp.float32)
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def spike_linear(p: Dict[str, Any], x: jax.Array, *,
+                 engine: Optional[EngineConfig] = None) -> jax.Array:
+    """Dual-engine linear layer for spike (or spike-derived sparse) inputs.
+
+    p: {'w': (K, N)[, 'b': (N,)]} param dict (models/nn.py layout);
+    x: (..., K) activations — {0,1} spikes or the sparse integer counts a
+    binary-attention context carries. Leading dims fold into the sparse
+    engine's M. ``engine=None`` uses the ambient engine (see use_engine);
+    no ambient engine means dense.
+    """
+    engine = engine if engine is not None else get_engine()
+    k = x.shape[-1]
+    n = p["w"].shape[1]
+    m = 1
+    for d in x.shape[:-1]:
+        m *= d
+    if resolve_mode(engine, m, k, n) == "dense":
+        return dense_spike_linear(p, x)
+    out = _sparse_matmul(x.reshape(-1, k), p["w"], p.get("b"),
+                         engine.block_m, engine.block_n, engine.block_k,
+                         engine.interpret)
+    return out.reshape(*x.shape[:-1], n).astype(x.dtype)

@@ -24,6 +24,7 @@ from .lif import lif_forward as _lif_pallas
 from .popcount_attention import popcount_scores as _popcount_pallas
 from .spike_attention import spike_attention as _attn_pallas
 from .spike_matmul import spike_matmul as _matmul_pallas
+from .spike_matmul import spike_matmul_batched as _matmul_batched_pallas
 
 
 # ---------------------------------------------------------------------------
@@ -82,11 +83,23 @@ def spike_attention(q, k, v, *, scale: float, delta, alpha: float = 4.0,
 # sparse spike matmul
 # ---------------------------------------------------------------------------
 
-def spike_matmul(s, w, *, block_m: int = 128, block_n: int = 128,
+def spike_matmul(s, w, *, bias=None, block_m: int = 128, block_n: int = 128,
                  block_k: int = 128):
-    """y = s @ w with zero-block skipping. s: (M, K) spikes, w: (K, N)."""
-    return _matmul_pallas(s, w, block_m=block_m, block_n=block_n,
+    """y = s @ w (+ bias) with zero-block skipping. s: (M, K) spikes,
+    w: (K, N). Non-divisible shapes are zero-padded internally."""
+    return _matmul_pallas(s, w, bias=bias, block_m=block_m, block_n=block_n,
                           block_k=block_k)
+
+
+def spike_matmul_batched(s, w, *, bias=None, block_m: int = 128,
+                         block_n: int = 128, block_k: int = 128):
+    """Batched y = s @ w (+ bias): s (T, B, ..., K) spikes folded into M.
+
+    For a differentiable, config-driven entry use
+    ``repro.core.engine.spike_linear`` — this wrapper is the raw fwd-only
+    kernel call."""
+    return _matmul_batched_pallas(s, w, bias=bias, block_m=block_m,
+                                  block_n=block_n, block_k=block_k)
 
 
 # ---------------------------------------------------------------------------

@@ -13,6 +13,14 @@ the occupancy reduction itself is the multi-lane decode).
 
 Grid: (nM, nN, nK), K innermost; fp32 accumulator in the revisited output
 block. The occupancy map is a tiny (nM, nK) int32 array staged per-step.
+A fused bias lands on the last K step, after the final accumulation, so
+the dense reference (fp32 dot, then bias) is reproduced term-for-term.
+
+Shapes that don't divide the block sizes are zero-padded: padded K
+columns contribute exact fp32 zeros (and all-zero padded blocks are
+skipped by occupancy anyway), padded M rows / N columns are sliced off.
+``spike_matmul_batched`` folds arbitrary leading ``(T, B, ...)`` dims
+into M — the layout every model activation ``(T, B, L, D)`` arrives in.
 """
 from __future__ import annotations
 
@@ -40,6 +48,26 @@ def _kernel(occ_ref, s_ref, w_ref, o_ref):
             preferred_element_type=jnp.float32)
 
 
+def _kernel_bias(occ_ref, s_ref, w_ref, b_ref, o_ref, *, nk):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(occ_ref[0, 0] > 0)
+    def _compute():
+        s = s_ref[...].astype(jnp.float32)
+        w = w_ref[...].astype(jnp.float32)
+        o_ref[...] += jax.lax.dot_general(
+            s, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _bias():
+        o_ref[...] += b_ref[...].astype(jnp.float32)
+
+
 def block_occupancy(s: jax.Array, block_m: int, block_k: int) -> jax.Array:
     """(M, K) spikes -> (nM, nK) int32 any-nonzero per block."""
     m, k = s.shape
@@ -48,36 +76,83 @@ def block_occupancy(s: jax.Array, block_m: int, block_k: int) -> jax.Array:
     return occ.astype(jnp.int32)
 
 
+def _pad_dim(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
 def spike_matmul(s: jax.Array, w: jax.Array, *,
+                 bias: Optional[jax.Array] = None,
                  block_m: int = 128, block_n: int = 128, block_k: int = 128,
                  occupancy: Optional[jax.Array] = None,
+                 out_dtype=None,
                  interpret: Optional[bool] = None) -> jax.Array:
-    """y = s @ w; s: (M, K) {0,1} spikes, w: (K, N) weights -> (M, N) fp32
-    cast to w.dtype. Zero spike blocks are skipped."""
+    """y = s @ w (+ bias); s: (M, K) {0,1} spikes, w: (K, N) weights ->
+    (M, N) fp32 cast to ``out_dtype`` (default w.dtype; pass jnp.float32
+    to keep the raw accumulator — the engine does, so mixed weight/
+    activation dtypes round once, not twice). Zero spike blocks are
+    skipped; shapes that don't divide the blocks are zero-padded and
+    sliced back."""
     m, k = s.shape
     k2, n = w.shape
     assert k == k2
     block_m = min(block_m, m)
     block_n = min(block_n, n)
     block_k = min(block_k, k)
-    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    occ = block_occupancy(s, block_m, block_k) if occupancy is None \
+
+    sp = _pad_dim(_pad_dim(s, 0, block_m), 1, block_k)
+    wp = _pad_dim(_pad_dim(w, 0, block_k), 1, block_n)
+    mp, kp = sp.shape
+    np_ = wp.shape[1]
+    occ = block_occupancy(sp, block_m, block_k) if occupancy is None \
         else occupancy
 
-    grid = (m // block_m, n // block_n, k // block_k)
+    grid = (mp // block_m, np_ // block_n, kp // block_k)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda mi, ni, ki: (mi, ki)),
+        pl.BlockSpec((block_m, block_k), lambda mi, ni, ki: (mi, ki)),
+        pl.BlockSpec((block_k, block_n), lambda mi, ni, ki: (ki, ni)),
+    ]
+    operands = [occ, sp, wp]
+    if bias is None:
+        kernel = _kernel
+    else:
+        kernel = functools.partial(_kernel_bias, nk=grid[2])
+        in_specs.append(pl.BlockSpec((1, block_n),
+                                     lambda mi, ni, ki: (0, ni)))
+        operands.append(_pad_dim(bias.reshape(1, n), 1, block_n))
     out = pl.pallas_call(
-        functools.partial(_kernel),
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda mi, ni, ki: (mi, ki)),
-            pl.BlockSpec((block_m, block_k), lambda mi, ni, ki: (mi, ki)),
-            pl.BlockSpec((block_k, block_n), lambda mi, ni, ki: (ki, ni)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((block_m, block_n),
                                lambda mi, ni, ki: (mi, ni)),
-        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
         interpret=interpret,
-    )(occ, s, w)
-    return out.astype(w.dtype)
+    )(*operands)
+    return out[:m, :n].astype(w.dtype if out_dtype is None else out_dtype)
+
+
+def spike_matmul_batched(s: jax.Array, w: jax.Array, *,
+                         bias: Optional[jax.Array] = None,
+                         block_m: int = 128, block_n: int = 128,
+                         block_k: int = 128,
+                         interpret: Optional[bool] = None) -> jax.Array:
+    """y = s @ w (+ bias) over arbitrary leading dims.
+
+    s: (T, B, ..., K) spikes; the leading dims fold into the kernel's M —
+    the spatial-temporal grid is one flat stream of rows to the sparse
+    engine, so whole-tile skips fire across time steps and batch entries
+    alike. Returns (T, B, ..., N) in w.dtype.
+    """
+    lead = s.shape[:-1]
+    y = spike_matmul(s.reshape(-1, s.shape[-1]), w, bias=bias,
+                     block_m=block_m, block_n=block_n, block_k=block_k,
+                     interpret=interpret)
+    return y.reshape(*lead, w.shape[1])

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, RunShape
+from repro.core.engine import engine_scope
 from repro.models import registry
 from repro.optim import Optimizer
 
@@ -97,8 +98,9 @@ def build_train_step(cfg: ModelConfig, optimizer: Optimizer,
     if stateful:
         def train_step(params, opt_state, step, batch, model_state):
             def loss_fn(p):
-                logits, aux = registry.forward(p, cfg, batch, train=True,
-                                               state=model_state)
+                with engine_scope(cfg):
+                    logits, aux = registry.forward(p, cfg, batch, train=True,
+                                                   state=model_state)
                 return loss_from_forward(cfg, logits, batch), aux
             (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
                 params)
@@ -111,7 +113,8 @@ def build_train_step(cfg: ModelConfig, optimizer: Optimizer,
 
     def train_step(params, opt_state, step, batch):
         def loss_fn(p):
-            logits, aux = registry.forward(p, cfg, batch, train=True)
+            with engine_scope(cfg):
+                logits, aux = registry.forward(p, cfg, batch, train=True)
             loss = loss_from_forward(cfg, logits, batch)
             if "moe_aux" in aux:
                 loss = loss + aux["moe_aux"]
@@ -137,7 +140,8 @@ def build_prefill_step(cfg: ModelConfig) -> Callable:
     materialization for chunked prefill->decode handoff is exercised by
     serve.py at host scale)."""
     def prefill_step(params, batch):
-        logits, _ = registry.forward(params, cfg, batch, train=False)
+        with engine_scope(cfg):
+            logits, _ = registry.forward(params, cfg, batch, train=False)
         return logits
     return prefill_step
 
@@ -146,8 +150,9 @@ def build_serve_step(cfg: ModelConfig) -> Callable:
     """One decode step: (params, cache, tokens (B,1), pos) ->
     (next_token_logits, new_cache)."""
     def serve_step(params, cache, tokens, pos):
-        logits, new_cache = registry.decode_step(params, cfg, cache, tokens,
-                                                 pos)
+        with engine_scope(cfg):
+            logits, new_cache = registry.decode_step(params, cfg, cache,
+                                                     tokens, pos)
         return logits, new_cache
     return serve_step
 

@@ -37,7 +37,16 @@ def linear_init(key, d_in: int, d_out: int, *, bias: bool = False,
     return p
 
 
-def linear(p, x):
+def linear(p, x, *, spikes: bool = False):
+    # ``spikes=True`` marks the input as a {0,1} spike tensor (or the
+    # sparse integer counts binary attention emits): those call sites
+    # route through the dual-engine dispatch (core/engine.py), which may
+    # run the occupancy-skipping sparse kernel when an engine is
+    # installed. With no ambient engine this is the plain dense path.
+    if spikes:
+        from repro.core import engine as _engine  # lazy: no import cycle
+        if _engine.get_engine() is not None:
+            return _engine.spike_linear(p, x)
     # emit in the activation dtype: the MXU accumulates fp32 internally,
     # and a bf16 result keeps every downstream collective (row-parallel
     # psum, FSDP gather of the transposed weight in bwd) in bf16 instead

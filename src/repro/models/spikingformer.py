@@ -167,7 +167,7 @@ def _ssa(p, st, cfg: ModelConfig, x, train: bool):
     new_st = dict(st)
 
     def proj(name, w):
-        cur = nn.linear(p[w], s)
+        cur = nn.linear(p[w], s, spikes=True)
         y, bn_st = nn.batchnorm(p[f"bn_{name}"], st[f"bn_{name}"],
                                 cur.reshape(-1, cur.shape[-1]), train=train)
         new_st[f"bn_{name}"] = bn_st
@@ -185,7 +185,10 @@ def _ssa(p, st, cfg: ModelConfig, x, train: bool):
                             use_kernel=getattr(cfg.spiking, "use_kernel",
                                                False))
     ctx = ctx.transpose(0, 2, 1, 3).reshape(t, b, l, cfg.q_dim)
-    out = nn.linear(p["wo"], ctx)
+    # ctx is binarized-attention output: sparse integer counts, not {0,1}
+    # spikes — but zero blocks are zero blocks, so the sparse engine skips
+    # them all the same (every spiking matmul is sparsity-aware).
+    out = nn.linear(p["wo"], ctx, spikes=True)
     out, bn_st = nn.batchnorm(p["bn_o"], st["bn_o"],
                               out.reshape(-1, d), train=train)
     new_st["bn_o"] = bn_st
@@ -196,12 +199,12 @@ def _block(p, st, cfg: ModelConfig, x, train: bool):
     attn, new_st = _ssa(p, st, cfg, x, train)
     x = x + attn                                  # pre-neuron residual
     s = _lif(x, cfg)
-    h = nn.linear(p["w1"], s)
+    h = nn.linear(p["w1"], s, spikes=True)
     h, bn1 = nn.batchnorm(p["bn_1"], st["bn_1"], h.reshape(-1, h.shape[-1]),
                           train=train)
     new_st["bn_1"] = bn1
     h = _lif(h.reshape(*x.shape[:-1], cfg.d_ff), cfg)
-    o = nn.linear(p["w2"], h)
+    o = nn.linear(p["w2"], h, spikes=True)
     o, bn2 = nn.batchnorm(p["bn_2"], st["bn_2"], o.reshape(-1, o.shape[-1]),
                           train=train)
     new_st["bn_2"] = bn2

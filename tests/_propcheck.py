@@ -1,0 +1,138 @@
+"""Fixed-seed stand-in for the `hypothesis` subset this suite uses.
+
+The container does not ship `hypothesis`; the property tests only need
+``@settings(max_examples=N, deadline=None)``, ``@given(...)`` and the
+``st.integers / st.floats / st.lists / st.sampled_from / st.booleans``
+strategies. This shim replays a deterministic example stream (seeded per
+test name, boundary values first) so the tests collect and run anywhere.
+If the real package is installed, the test modules import it instead.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+
+class _Strategy:
+    def example(self, i: int, rng: random.Random):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def example(self, i, rng):
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(_Strategy):
+    def __init__(self, min_value, max_value):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def example(self, i, rng):
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Booleans(_Strategy):
+    def example(self, i, rng):
+        if i < 2:
+            return bool(i)
+        return rng.random() < 0.5
+
+
+class _SampledFrom(_Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def example(self, i, rng):
+        if i < len(self.elements):
+            return self.elements[i]
+        return rng.choice(self.elements)
+
+
+class _Lists(_Strategy):
+    def __init__(self, elements, min_size=0, max_size=10):
+        self.elements = elements
+        self.lo, self.hi = int(min_size), int(max_size)
+
+    def example(self, i, rng):
+        if i == 0:
+            size = self.lo
+        elif i == 1:
+            size = self.hi
+        else:
+            size = rng.randint(self.lo, self.hi)
+        return [self.elements.example(rng.randint(2, 1 << 30), rng)
+                for _ in range(size)]
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Floats(min_value, max_value)
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+    @staticmethod
+    def sampled_from(elements):
+        return _SampledFrom(elements)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        return _Lists(elements, min_size=min_size, max_size=max_size)
+
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Records max_examples on the (given-wrapped) test function."""
+    def deco(fn):
+        fn._propcheck_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    """Replays a fixed example stream through the test body.
+
+    Example i draws each strategy's i-th example (0/1 are the boundary
+    values); the RNG is seeded from the test name so runs and reruns see
+    the same stream.
+    """
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_propcheck_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(zlib.crc32(fn.__name__.encode()))
+            for i in range(n):
+                vals = [s.example(i, rng) for s in strats]
+                try:
+                    fn(*args, *vals, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__name__} falsified on example {i}: "
+                        f"{vals!r}") from e
+        # strategy params are supplied here, not by pytest fixtures
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco

@@ -1,7 +1,10 @@
 """Multi-lane decoder (Eq. 5) bit-exactness + bitmap/bitpack properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis; use fixed-seed shim
+    from _propcheck import given, settings, strategies as st
 
 import jax.numpy as jnp
 
