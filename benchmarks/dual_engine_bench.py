@@ -1,7 +1,9 @@
-"""Dual-engine sweep: dense XLA dot vs occupancy-skipping sparse kernel.
+"""Dual-engine sweep: both halves of the overlay.
 
-For each (sparsity, block, shape) point this times ``spike_linear``'s two
-dispatch targets on the same spike tensor and records
+Sparse engine (``rows``): dense XLA dot vs occupancy-skipping sparse
+kernel. For each (sparsity, block, shape) point this times
+``spike_linear``'s two dispatch targets on the same spike tensor and
+records
 
   * dense_us / sparse_us — wall time per call (median of reps). On CPU
     the kernel runs in Pallas *interpret* mode, so the wall-clock ratio
@@ -20,9 +22,23 @@ tiles fire at 25% density. That is the regime where whole-tile skips
 pay; i.i.d. Bernoulli sparsity at the same rate almost never yields an
 empty 128x128 tile and is reported by the bench as skip_fraction ~ 0.
 
+Binary engine (``attention_rows``): the three SSA execution targets of
+``core.engine.resolve_binary_mode`` — pure jnp, the fused MXU Pallas
+kernel, the bit-packed popcount port — swept over L x d_head x causal on
+identical spike tensors. All three are bit-identical (pinned by
+tests/test_binary_engine.py); the sweep quantifies the *speed* gap the
+dispatch rules encode (DESIGN.md §3: MXU dominates popcount on TPU). On
+CPU the kernels run in interpret mode, so kernel wall-clock measures the
+lowered-lax emulation — jnp_us is the transferable baseline there.
+
+The measured medians also feed the overlap model: ``derived
+['measured_overlap']`` runs ``core.dual_engine.measured_schedule`` on
+(sparse_us, mxu_us) — the Fig. 5 latency-hiding fraction from measured
+engine timings instead of the analytic MAC model.
+
 Output: ``artifacts/dual_engine_bench.json`` in the benchmark harness's
-``{"rows": [...], "derived": {...}}`` format (also wired into
-``benchmarks/run.py``).
+``{"rows": [...], "attention_rows": [...], "derived": {...}}`` format
+(also wired into ``benchmarks/run.py``, which re-emits the same file).
 
 Usage: PYTHONPATH=src python benchmarks/dual_engine_bench.py [--fast]
 """
@@ -43,6 +59,12 @@ SHAPES = [(256, 128, 256), (512, 256, 256), (1024, 256, 512)]  # (M, K, N)
 BLOCKS = [64, 128]
 SPARSITIES = [0.5, 0.75, 0.9]
 REPS = 5
+
+# binary-engine sweep: (BH, L, d_head); 100 is deliberately non-divisible
+# by the 128 attention blocks (exercises the kernels' zero-padding)
+ATTN_SHAPES = [(8, 64, 32), (8, 100, 64), (8, 256, 64)]
+ATTN_CAUSAL = [False, True]
+ATTN_DENSITY = 0.25
 
 
 def coherent_spikes(key, m, k, block, sparsity, density=0.25):
@@ -66,8 +88,46 @@ def _time(fn, *args) -> float:
     return sorted(ts)[len(ts) // 2] * 1e6   # median, us
 
 
+def attention_bench(fast: bool = False):
+    """Binary-engine sweep: jnp vs MXU kernel vs popcount per SSA shape."""
+    from repro.core import engine as E
+    from repro.core.attention import spiking_attention
+    from repro.core.spiking import SpikingConfig
+
+    scfg = SpikingConfig()
+    shapes = ATTN_SHAPES[:2] if fast else ATTN_SHAPES
+    rows = []
+    for bh, l, d in shapes:
+        ks = jax.random.split(jax.random.PRNGKey(bh + l + d), 3)
+        q, k, v = ((jax.random.uniform(kk, (bh, l, d)) < ATTN_DENSITY)
+                   .astype(jnp.float32) for kk in ks)
+        for causal in ATTN_CAUSAL:
+            us = {}
+            for mode in ("jnp", "mxu_kernel", "popcount"):
+                eng = E.EngineConfig(binary=mode)
+
+                def call(q, k, v, eng=eng, causal=causal):
+                    return spiking_attention(q, k, v, scfg,
+                                             delta_score=0.3,
+                                             causal=causal, engine=eng)
+                us[mode] = _time(jax.jit(call), q, k, v)
+            rows.append({
+                "bench": "attention", "shape": [bh, l, d],
+                "causal": causal,
+                "jnp_us": round(us["jnp"], 1),
+                "mxu_us": round(us["mxu_kernel"], 1),
+                "popcount_us": round(us["popcount"], 1),
+                "mxu_vs_jnp": round(us["jnp"] / us["mxu_kernel"], 3),
+                "popcount_vs_mxu": round(
+                    us["popcount"] / us["mxu_kernel"], 3),
+            })
+    return rows
+
+
 def bench(fast: bool = False):
     from repro.core import engine as E
+    from repro.core.dual_engine import (measured_overlap_efficiency,
+                                        measured_schedule)
     from repro.kernels.spike_matmul import block_occupancy
 
     shapes = SHAPES[:2] if fast else SHAPES
@@ -91,6 +151,7 @@ def bench(fast: bool = False):
                 skip = float(1.0 - occ.mean())
                 tiles = occ.size  # MAC reduction is bounded by the grid
                 rows.append({
+                    "bench": "linear",
                     "shape": [m, k, n], "block": block,
                     "sparsity": sparsity,
                     "measured_sparsity": float(1.0 - s.mean()),
@@ -101,6 +162,11 @@ def bench(fast: bool = False):
                     "modeled_speedup": round(
                         min(1.0 / max(1e-9, 1.0 - skip), float(tiles)), 3),
                 })
+    attn_rows = attention_bench(fast=fast)
+    med = lambda xs: sorted(xs)[len(xs) // 2]
+    sparse_med = med([r["sparse_us"] for r in rows])
+    mxu_med = med([r["mxu_us"] for r in attn_rows])
+    _, _, overlapped, serial = measured_schedule(sparse_med, mxu_med)
     derived = {
         "backend": jax.default_backend(),
         "interpret_mode": jax.default_backend() != "tpu",
@@ -109,8 +175,30 @@ def bench(fast: bool = False):
         "mean_skip_at_0.9": round(sum(
             r["skip_fraction"] for r in rows if r["sparsity"] == 0.9) /
             max(1, sum(1 for r in rows if r["sparsity"] == 0.9)), 4),
+        "attention_points": len(attn_rows),
+        "mxu_vs_jnp_median": med([r["mxu_vs_jnp"] for r in attn_rows]),
+        "popcount_vs_mxu_median": med(
+            [r["popcount_vs_mxu"] for r in attn_rows]),
+        # Fig. 5 overlap model on measured engine medians (us events)
+        "measured_overlap": {
+            "sparse_op_us": round(sparse_med, 1),
+            "binary_op_us": round(mxu_med, 1),
+            "overlapped_us": round(overlapped, 1),
+            "serial_us": round(serial, 1),
+            "hidden_fraction": round(
+                measured_overlap_efficiency(sparse_med, mxu_med), 4),
+        },
     }
-    return rows, derived
+    return rows + attn_rows, derived
+
+
+def to_blob(rows, derived):
+    """Split the tagged row list into the artifact layout
+    ({'rows': linear, 'attention_rows': attention, 'derived': ...})."""
+    return {"rows": [r for r in rows if r.get("bench") != "attention"],
+            "attention_rows": [r for r in rows
+                               if r.get("bench") == "attention"],
+            "derived": derived}
 
 
 def main():
@@ -119,16 +207,23 @@ def main():
     ap.add_argument("--out", default="artifacts/dual_engine_bench.json")
     args = ap.parse_args()
     rows, derived = bench(fast=args.fast)
+    blob = to_blob(rows, derived)
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
-        json.dump({"rows": rows, "derived": derived}, f, indent=1)
+        json.dump(blob, f, indent=1)
     print("shape,block,sparsity,dense_us,sparse_us,wall_speedup,"
           "skip_fraction,modeled_speedup")
-    for r in rows:
+    for r in blob["rows"]:
         print(f"{'x'.join(map(str, r['shape']))},{r['block']},"
               f"{r['sparsity']},{r['dense_us']},{r['sparse_us']},"
               f"{r['wall_speedup']},{r['skip_fraction']},"
               f"{r['modeled_speedup']}")
+    print("shape,causal,jnp_us,mxu_us,popcount_us,mxu_vs_jnp,"
+          "popcount_vs_mxu")
+    for r in blob["attention_rows"]:
+        print(f"{'x'.join(map(str, r['shape']))},{r['causal']},"
+              f"{r['jnp_us']},{r['mxu_us']},{r['popcount_us']},"
+              f"{r['mxu_vs_jnp']},{r['popcount_vs_mxu']}")
     print(json.dumps(derived))
 
 

@@ -22,7 +22,12 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="skip the model-training sparsity bench")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: --fast + --skip-roofline")
     args = ap.parse_args()
+    if args.smoke:
+        args.fast = True
+        args.skip_roofline = True
 
     import dual_engine_bench
     import paper_figures as pf
@@ -50,6 +55,12 @@ def main() -> None:
     os.makedirs("artifacts", exist_ok=True)
     with open("artifacts/bench_results.json", "w") as f:
         json.dump(all_rows, f, indent=1, default=str)
+    # standalone dual-engine artifact (matmul + attention sweeps): same
+    # layout dual_engine_bench.py --out writes, kept current by every run
+    de = all_rows["dual_engine"]
+    with open("artifacts/dual_engine_bench.json", "w") as f:
+        json.dump(dual_engine_bench.to_blob(de["rows"], de["derived"]),
+                  f, indent=1)
 
     print("\n== row dumps ==")
     for name, blob in all_rows.items():

@@ -6,7 +6,8 @@ CPU tests)."""
 from . import (cifarnet, deepseek_moe_16b, gemma3_12b, granite_20b,
                h2o_danube3_4b, hymba_1_5b, kimi_k2_1t_a32b,
                llava_next_mistral_7b, nemotron_4_15b, rwkv6_3b, shapes,
-               spikingformer_4_256, spikingformer_8_512, whisper_small)
+               spikingformer_4_256, spikingformer_8_512, spikingformer_lm,
+               whisper_small)
 from .base import ModelConfig, RunShape
 from .shapes import SHAPES
 
@@ -23,6 +24,7 @@ _MODULES = {
     "llava-next-mistral-7b": llava_next_mistral_7b,
     "spikingformer-4-256": spikingformer_4_256,
     "spikingformer-8-512": spikingformer_8_512,
+    "spikingformer-lm": spikingformer_lm,
     "cifarnet": cifarnet,
 }
 

@@ -94,8 +94,10 @@ class ModelConfig:
     encoder_seq: int = 1500          # whisper frame count (stubbed frontend)
     spiking: Optional[SpikingConfig] = None
     # dual-engine dispatch: step builders install this engine around the
-    # forward pass, routing spike matmuls dense vs block-sparse
-    # (core/engine.py). None = always dense.
+    # forward pass, routing spike matmuls dense vs block-sparse AND
+    # spiking attention jnp vs MXU-kernel vs popcount (core/engine.py).
+    # The engine's packed_kv flag also selects the bit-packed spike KV
+    # cache layout for spiking decode. None = always dense / jnp.
     engine: Optional[EngineConfig] = None
     dtype: str = "bfloat16"
     remat: bool = True

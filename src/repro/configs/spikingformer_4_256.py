@@ -13,9 +13,11 @@ CONFIG = ModelConfig(
     vision=VisionSpec(img_size=32, in_channels=3, sps_stages=2),
     spiking=SpikingConfig(time_steps=4),
     # dual-engine hot path: spike matmuls big enough to tile go through
-    # the occupancy-skipping sparse kernel; the flop floor keeps the CPU
-    # smoke shapes on the dense XLA path (engine dispatch is still
-    # exercised — it just resolves dense there).
+    # the occupancy-skipping sparse kernel, and the SSA routes through
+    # the binary engine (binary='auto' picks the fused MXU kernel once
+    # the attention volume clears the same flop floor). The floor keeps
+    # CPU smoke shapes on the plain XLA paths (engine dispatch is still
+    # exercised — it just resolves dense/jnp there).
     engine=EngineConfig(mode="auto"),
 )
 

@@ -11,6 +11,8 @@ CONFIG = ModelConfig(
     d_ff=2048, vocab_size=1000,
     vision=VisionSpec(img_size=224, in_channels=3, sps_stages=4),
     spiking=SpikingConfig(time_steps=4),
+    # auto on both engines: sparse matmuls + MXU-kernel SSA at the 196-
+    # token ImageNet shape (see spikingformer_4_256 for the dispatch note)
     engine=EngineConfig(mode="auto"),
 )
 

@@ -9,16 +9,25 @@ The binary engine's workload: given spiking ``Q, K, V`` in {0,1},
 
 No softmax — which is exactly why the whole thing fuses into a single-pass
 Pallas kernel with no running-max bookkeeping (see kernels/spike_attention).
-This module is the pure-jnp functional form used by models; the jit'd Pallas
-path is selected via ``use_kernel``.
+
+Engine dispatch (DESIGN.md §4): :func:`spiking_attention` consults the
+ambient :class:`~repro.core.engine.EngineConfig` (installed by the step
+builders from ``ModelConfig.engine``) and routes to one of the binary
+engine's three execution targets — the pure-jnp reference below, the
+fused MXU Pallas kernel, or the bit-packed AND-PopCount port. All three
+are bit-identical on spike inputs: {0,1} dot products accumulate exact
+small integers in fp32 regardless of tiling order, and the threshold
+compare is the shared ``binarize`` expression.
 """
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from .engine import EngineConfig, get_engine, resolve_binary_mode
 from .spiking import SpikingConfig, binarize
 
 
@@ -35,32 +44,56 @@ def spiking_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                       cfg: SpikingConfig,
                       delta_score: jax.Array | float = 0.0,
                       scale: Optional[float] = None,
-                      use_kernel: bool = False) -> jax.Array:
+                      causal: bool = False,
+                      engine: Optional[EngineConfig] = None) -> jax.Array:
     """Binary spiking attention over the last two dims ``(L, d_head)``.
 
     Args:
       q, k, v: ``(..., L, d)`` spike tensors ({0,1} values, float dtype).
+        Leading dims (batch, heads, time steps in any order) fold into the
+        binary engine's BH axis.
       cfg: spiking config (binarize_scores toggles binary attention vs the
         raw spiking attention of Spikformer/Spikingformer Eq. 2).
       delta_score: learnable binarization threshold Δ for the scores.
       scale: score scale; defaults to 1/sqrt(d) per Eq. 2.
+      causal: mask future positions (token SSA; vision SSA is bidirectional).
+      engine: explicit engine override; ``None`` uses the ambient engine
+        (see ``core.engine.use_engine``), no ambient engine means the
+        pure-jnp reference path.
 
     Returns:
       context ``(..., L, d)`` — binarized scores times V (membrane currents;
       the caller applies the output spiking neuron / residual).
     """
     d = q.shape[-1]
-    scale = (1.0 / jnp.sqrt(d)) if scale is None else scale
-    if use_kernel:
+    l = q.shape[-2]
+    # python-float scale (not a traced 1/jnp.sqrt) so the kernel paths can
+    # close over it statically under jit; every engine mode then scales by
+    # the identical value, which the cross-mode bit-parity tests rely on
+    scale = (1.0 / math.sqrt(d)) if scale is None else scale
+    engine = engine if engine is not None else get_engine()
+    bh = 1
+    for dim in q.shape[:-2]:
+        bh *= dim
+    mode = resolve_binary_mode(engine, bh, l, d)
+    if mode != "jnp":
         from repro.kernels import ops as kops  # lazy: keeps core importable
-        return kops.spike_attention(
-            q, k, v, scale=float(scale),
-            delta=delta_score, binarize_scores=cfg.binarize_scores,
-            alpha=cfg.surrogate_alpha)
+        fold = lambda u: u.reshape(bh, l, d)
+        out = kops.binary_attention(
+            fold(q), fold(k), fold(v), scale=float(scale),
+            delta=delta_score, causal=causal,
+            binarize_scores=cfg.binarize_scores,
+            alpha=cfg.surrogate_alpha,
+            use_popcount=(mode == "popcount"),
+            block_q=engine.attn_block_q, block_k=engine.attn_block_k)
+        return out.reshape(q.shape)
     scores = binary_attention_scores(q, k) * scale
     if cfg.binarize_scores:
         attn = binarize(scores, delta_score, cfg.surrogate_alpha)
     else:
         attn = scores
+    if causal:
+        mask = jnp.tril(jnp.ones((l, l), bool))
+        attn = jnp.where(mask, attn, 0.0)
     return jnp.einsum("...qk,...kd->...qd", attn, v,
                       preferred_element_type=jnp.float32).astype(q.dtype)

@@ -16,25 +16,44 @@ WORD = 32
 _WEIGHTS = (jnp.uint32(1) << jnp.arange(WORD, dtype=jnp.uint32))
 
 
+def pad_to_multiple(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    """Zero-pad ``axis`` up to the next multiple of ``mult`` (no-op when
+    it already divides). Shared by the packing below and every Pallas
+    kernel's non-divisible-shape handling: zero spikes are AND-PopCount
+    neutral and contribute exact fp32 zeros to any accumulation."""
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
 def pack_bits(x: jax.Array) -> jax.Array:
     """Pack binary values along the last axis into uint32 words.
 
-    ``(..., n)`` with n % 32 == 0  ->  ``(..., n // 32)`` uint32.
-    Bit ``j`` of word ``w`` is element ``w * 32 + j`` (little-endian bits).
+    ``(..., n)`` -> ``(..., ceil(n / 32))`` uint32. Bit ``j`` of word ``w``
+    is element ``w * 32 + j`` (little-endian bits). A last dim that does
+    not fill the final word is zero-padded: zero bits are AND-PopCount
+    neutral, so every popcount consumer (``popcount_matmul``, the
+    ``popcount_attention`` kernel, the packed decode KV cache) stays
+    bit-exact on head dims like 16 or 48.
     """
     n = x.shape[-1]
-    if n % WORD:
-        raise ValueError(f"last dim {n} not a multiple of {WORD}")
-    bits = (x != 0).astype(jnp.uint32).reshape(*x.shape[:-1], n // WORD, WORD)
+    x = pad_to_multiple(x, -1, WORD)
+    words = x.shape[-1] // WORD
+    bits = (x != 0).astype(jnp.uint32).reshape(*x.shape[:-1], words, WORD)
     return (bits * _WEIGHTS).sum(axis=-1, dtype=jnp.uint32)
 
 
 def unpack_bits(p: jax.Array, n: int, dtype=jnp.float32) -> jax.Array:
-    """Inverse of :func:`pack_bits`: ``(..., n//32)`` uint32 -> ``(..., n)``."""
-    if n != p.shape[-1] * WORD:
+    """Inverse of :func:`pack_bits`: ``(..., ceil(n/32))`` uint32 ->
+    ``(..., n)`` (padding bits of the final word are dropped)."""
+    if -(-n // WORD) != p.shape[-1]:
         raise ValueError(f"n={n} inconsistent with packed shape {p.shape}")
     bits = (p[..., None] >> jnp.arange(WORD, dtype=jnp.uint32)) & jnp.uint32(1)
-    return bits.reshape(*p.shape[:-1], n).astype(dtype)
+    full = bits.reshape(*p.shape[:-1], p.shape[-1] * WORD)
+    return full[..., :n].astype(dtype)
 
 
 def popcount_matmul(a_packed: jax.Array, b_packed: jax.Array) -> jax.Array:

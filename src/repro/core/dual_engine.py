@@ -68,27 +68,17 @@ def required_binary_parallelism(w: AttentionWorkload, p: EngineParallelism) -> f
     return 2.0 / 3.0 * (w.L / w.C_i) * p.P_s
 
 
-def pipeline_schedule(w: AttentionWorkload, p: EngineParallelism,
-                      sparsity: float = 0.0
-                      ) -> Tuple[List[tuple], List[tuple], int, int]:
-    """Discrete-event schedule of the latency-hiding pipeline (Fig. 5).
-
-    The sparse engine serially computes Q_h, K_h, V_h per head (each taking
-    ``W_s/P_s_eff`` cycles, where effective throughput scales with input
-    density when sparsity skipping is on); the binary engine computes
-    ``QK^T_h`` once Q_h,K_h are done and ``QK^T V_h`` once V_h is done.
-
-    Returns (sparse_events, binary_events, total_overlapped, total_serial);
-    events are (name, start, end) in cycles.
-    """
-    ts = w.W_s() / (p.P_s / max(1e-9, 1.0 - sparsity))  # sparse op latency
-    tb = w.W_b() / p.P_b                                # binary op latency
-
+def _event_schedule(ts: float, tb: float, heads: int
+                    ) -> Tuple[List[tuple], List[tuple], float, float]:
+    """Core event loop shared by the analytic and measured schedules:
+    the sparse engine serially computes Q_h, K_h, V_h per head (``ts``
+    each); the binary engine computes ``QK^T_h`` once Q_h,K_h are done
+    and ``QK^T V_h`` once V_h is done (``tb`` each)."""
     sparse_events, binary_events = [], []
     t_sparse = 0.0
     qk_done = {}
     v_done = {}
-    for h in range(w.heads):
+    for h in range(heads):
         for name in ("Q", "K", "V"):
             sparse_events.append((f"{name}{h}", t_sparse, t_sparse + ts))
             t_sparse += ts
@@ -97,7 +87,7 @@ def pipeline_schedule(w: AttentionWorkload, p: EngineParallelism,
             if name == "V":
                 v_done[h] = t_sparse
     t_bin = 0.0
-    for h in range(w.heads):
+    for h in range(heads):
         start = max(t_bin, qk_done[h])
         binary_events.append((f"QK^T {h}", start, start + tb))
         t_bin = start + tb
@@ -106,8 +96,50 @@ def pipeline_schedule(w: AttentionWorkload, p: EngineParallelism,
         t_bin = start + tb
 
     total_overlapped = max(t_sparse, t_bin if binary_events else 0.0)
-    total_serial = t_sparse + 2 * tb * w.heads
-    return sparse_events, binary_events, math.ceil(total_overlapped), math.ceil(total_serial)
+    total_serial = t_sparse + 2 * tb * heads
+    return sparse_events, binary_events, total_overlapped, total_serial
+
+
+def pipeline_schedule(w: AttentionWorkload, p: EngineParallelism,
+                      sparsity: float = 0.0
+                      ) -> Tuple[List[tuple], List[tuple], int, int]:
+    """Discrete-event schedule of the latency-hiding pipeline (Fig. 5).
+
+    Op latencies come from the analytic MAC model (Eq. 3 work over
+    Table II parallelism; sparse throughput scales with input density
+    when skipping is on). Returns (sparse_events, binary_events,
+    total_overlapped, total_serial); events are (name, start, end) in
+    cycles.
+    """
+    ts = w.W_s() / (p.P_s / max(1e-9, 1.0 - sparsity))  # sparse op latency
+    tb = w.W_b() / p.P_b                                # binary op latency
+    se, be, overlapped, serial = _event_schedule(ts, tb, w.heads)
+    return se, be, math.ceil(overlapped), math.ceil(serial)
+
+
+def measured_schedule(sparse_op_us: float, binary_op_us: float,
+                      heads: int = 8
+                      ) -> Tuple[List[tuple], List[tuple], float, float]:
+    """Fig. 5 schedule fed with *measured* engine timings instead of the
+    analytic MAC model — e.g. the per-call medians
+    ``benchmarks/dual_engine_bench.py`` writes to
+    ``artifacts/dual_engine_bench.json`` (``sparse_us`` from the matmul
+    sweep, ``mxu_us`` from the attention sweep). Events are in the same
+    unit as the inputs (microseconds); returns (sparse_events,
+    binary_events, total_overlapped, total_serial).
+    """
+    return _event_schedule(float(sparse_op_us), float(binary_op_us), heads)
+
+
+def measured_overlap_efficiency(sparse_op_us: float, binary_op_us: float,
+                                heads: int = 8) -> float:
+    """Fraction of the serial dual-engine latency the overlap hides,
+    from measured timings: 1 - overlapped/serial."""
+    _, _, overlapped, serial = measured_schedule(sparse_op_us,
+                                                 binary_op_us, heads)
+    if serial <= 0:
+        return 0.0
+    return 1.0 - overlapped / serial
 
 
 def pipeline_efficiency(w: AttentionWorkload, p: EngineParallelism,

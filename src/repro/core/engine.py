@@ -1,12 +1,12 @@
-"""Dual-engine dispatch: dense vs occupancy-skipping execution per matmul.
+"""Dual-engine dispatch: per-matmul *and* per-attention engine selection.
 
 FireFly-T's overlay couples a *sparse engine* (spike x weight projections,
-zero-skipping) with a *binary engine* (QK^T / QK^T V, AND-PopCount). On
-TPU the binary engine is the fused ``kernels/spike_attention`` call; this
-module is the orchestrator's other half (DESIGN.md §3/§4): every spiking
-matmul — Q/K/V/O projections, the MLP, anything whose input is a {0,1}
-spike tensor — routes through :func:`spike_linear`, which picks per call
-site between
+zero-skipping) with a *binary engine* (QK^T / QK^T V, AND-PopCount). This
+module is the orchestrator (DESIGN.md §3/§4) for both halves:
+
+Sparse engine — every spiking matmul (Q/K/V/O projections, the MLP,
+anything whose input is a {0,1} spike tensor) routes through
+:func:`spike_linear`, which picks per call site between
 
   * ``dense``  — plain XLA dot, fp32 accumulation (the measurement
     baseline every perf PR compares against), and
@@ -14,17 +14,33 @@ site between
     skips all-zero (block_m x block_k) spike tiles via the occupancy map
     (the MXU-granularity multi-lane decode).
 
+Binary engine — every spiking self-attention (``core.attention.
+spiking_attention``, the transformer family's spiking SSA) consults
+:func:`resolve_binary_mode` for its execution target:
+
+  * ``jnp``        — the pure-jnp reference dataflow (scores, binarize,
+    context), the baseline the kernels are pinned against;
+  * ``mxu_kernel`` — the fused single-pass Pallas kernel
+    (``kernels/spike_attention``): {0,1} dot products on the MXU *are*
+    AND-PopCount, the L x L attention matrix never leaves VMEM;
+  * ``popcount``   — the literal FPGA port (``kernels/
+    popcount_attention``): spikes bit-packed 32x into uint32 lanes,
+    scores via VPU ``population_count``. Kept first-class to pin the
+    AND-PopCount semantics and to quantify that the MXU form dominates
+    on TPU (never chosen by ``auto``).
+
 Dispatch is *static* (shape/config driven, resolved at trace time): jit
 can't branch on runtime density, so ``auto`` mode uses the flop volume as
-the proxy — tiny matmuls can't amortize occupancy staging and go dense.
-The engine is installed ambiently (thread-local, like sharding rules) by
-the step builders from ``ModelConfig.engine``, so model code stays free
-of engine plumbing. Off-TPU the kernel runs in ``interpret`` mode — the
-bit-exact Python evaluation this container's tests validate against.
+the proxy — tiny matmuls / tiny attention can't amortize kernel staging
+and stay on the XLA path. The engine is installed ambiently
+(thread-local, like sharding rules) by the step builders from
+``ModelConfig.engine``, so model code stays free of engine plumbing.
+Off-TPU the kernels run in ``interpret`` mode — the bit-exact Python
+evaluation this container's tests validate against.
 
-The sparse path carries a custom VJP (dense fp32 matmul transposes in
-bwd): spike inputs come from surrogate-gradient LIF neurons, so training
-steps differentiate straight through the dispatch.
+Both engines carry custom VJPs (dense fp32 transposes / surrogate-
+gradient recompute in bwd): spike inputs come from surrogate-gradient
+LIF neurons, so training steps differentiate straight through dispatch.
 """
 from __future__ import annotations
 
@@ -40,14 +56,29 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    """Sparse-engine dispatch knobs (per model, set on ModelConfig.engine).
+    """Dual-engine dispatch knobs (per model, set on ModelConfig.engine).
 
+    Sparse engine (spike x weight matmuls):
     mode: 'dense' | 'sparse' | 'auto'. 'auto' goes sparse only when the
       matmul's flop volume clears ``min_flops`` (occupancy staging and
       per-block control flow need real work to amortize — and it keeps
       CPU smoke configs on the fast XLA path).
     block_*: VMEM tile sizes of the kernel; (block_m x block_k) is also
       the skip granularity.
+
+    Binary engine (spiking self-attention):
+    binary: 'jnp' | 'mxu_kernel' | 'popcount' | 'auto'. 'auto' picks the
+      fused MXU kernel when the attention flop volume (both matmuls,
+      4 * BH * L^2 * d) clears ``min_flops``, else the jnp reference;
+      'popcount' (the bit-packed VPU port) is only ever explicit — the
+      benchmarks document that the MXU form dominates on TPU.
+    attn_block_q / attn_block_k: KV-tile sizes of the attention kernels
+      (non-divisible L is zero-padded inside the kernels).
+    packed_kv: spiking decode caches store K/V bit-packed (uint32, the
+      paper's 32x spike-RAM compression) and score against them with
+      AND-PopCount; layout is static per config, so this lives here and
+      not in the ambient state.
+
     interpret: force Pallas interpret mode (None = auto: off-TPU only).
     """
     mode: str = "auto"
@@ -55,7 +86,14 @@ class EngineConfig:
     block_n: int = 128
     block_k: int = 128
     min_flops: int = 1 << 22
+    binary: str = "auto"
+    attn_block_q: int = 128
+    attn_block_k: int = 128
+    packed_kv: bool = True
     interpret: Optional[bool] = None
+
+    def replace(self, **kw) -> "EngineConfig":
+        return dataclasses.replace(self, **kw)
 
 
 DENSE = EngineConfig(mode="dense")
@@ -109,6 +147,28 @@ def resolve_mode(engine: Optional[EngineConfig], m: int, k: int, n: int
     if engine.mode != "auto":
         raise ValueError(f"unknown engine mode {engine.mode!r}")
     return "sparse" if 2 * m * k * n >= engine.min_flops else "dense"
+
+
+BINARY_MODES = ("jnp", "mxu_kernel", "popcount")
+
+
+def resolve_binary_mode(engine: Optional[EngineConfig], bh: int, l: int,
+                        d: int) -> str:
+    """Static binary-engine decision for a (BH, L, d) spiking attention.
+
+    ``bh`` is the folded batch x heads dim; the workload is two L x L x d
+    matmuls per batch entry (QK^T and attn @ V — no softmax between, see
+    kernels/spike_attention). 'auto' never picks 'popcount': the MXU
+    kernel dominates it on TPU (DESIGN.md §3); the popcount path is an
+    explicit, semantics-pinning selection.
+    """
+    if engine is None:
+        return "jnp"
+    if engine.binary in BINARY_MODES:
+        return engine.binary
+    if engine.binary != "auto":
+        raise ValueError(f"unknown binary engine mode {engine.binary!r}")
+    return "mxu_kernel" if 4 * bh * l * l * d >= engine.min_flops else "jnp"
 
 
 # ---------------------------------------------------------------------------

@@ -1,9 +1,10 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-``spike_attention`` carries a custom VJP: the forward runs the fused Pallas
-kernel; the backward recomputes through the pure-jnp oracle with surrogate
-gradients (standard recompute-in-bwd pattern — the L x L attention matrix
-still never persists between fwd and bwd).
+``binary_attention`` / ``spike_attention`` carry a custom VJP: the forward
+runs a Pallas kernel (the fused MXU pass, or the bit-packed AND-PopCount
+score stage); the backward recomputes through the pure-jnp oracle with
+surrogate gradients (standard recompute-in-bwd pattern — the L x L
+attention matrix still never persists between fwd and bwd).
 
 On non-TPU backends kernels run in ``interpret=True`` mode (bit-exact
 Python execution of the kernel body) — that is how this CPU container
@@ -28,55 +29,104 @@ from .spike_matmul import spike_matmul_batched as _matmul_batched_pallas
 
 
 # ---------------------------------------------------------------------------
-# spike attention (fwd: Pallas, bwd: surrogate-gradient recompute)
+# binary attention (fwd: Pallas, bwd: surrogate-gradient recompute)
 # ---------------------------------------------------------------------------
+#
+# The differentiable core works on the *folded* (BH, L, D) layout — the
+# layout the binary-engine kernels consume. Dispatch callers (core/
+# attention.py) fold their leading dims themselves; the model-layout
+# (B', L, H, D) wrapper below keeps the historical entry point.
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
-def _spike_attention(q, k, v, delta, alpha, scale, causal, binarize_scores):
-    b, l, h, d = q.shape  # (B', L, H, D) model layout
-    fold = lambda u: u.transpose(0, 2, 1, 3).reshape(b * h, l, d)
-    out = _attn_pallas(fold(q), fold(k), fold(v), scale=scale, delta=delta,
-                       causal=causal, binarize_scores=binarize_scores)
-    return out.reshape(b, h, l, d).transpose(0, 2, 1, 3)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9, 10))
+def _binary_attention(q, k, v, delta, alpha, scale, causal, binarize_scores,
+                      use_popcount, block_q, block_k):
+    if use_popcount:
+        # faithful FPGA port: bit-pack the spikes, AND-PopCount the score
+        # stage on the VPU, context stage as a jnp matmul on the exact
+        # integer counts. Bit-identical to the MXU kernel: {0,1} dots in
+        # fp32 ARE the popcounts, and the threshold compare is the same
+        # expression.
+        counts = _popcount_pallas(pack_bits(q), pack_bits(k),
+                                  block_q=block_q, block_k=block_k)
+        s = counts.astype(jnp.float32) * scale
+        if binarize_scores:
+            a = (s - delta >= 0).astype(jnp.float32)
+        else:
+            a = s
+        if causal:
+            lq, lk = a.shape[-2:]
+            mask = jnp.tril(jnp.ones((lq, lk), bool))
+            a = jnp.where(mask[None], a, 0.0)
+        out = jnp.einsum("bqk,bkd->bqd", a, v.astype(jnp.float32),
+                         preferred_element_type=jnp.float32)
+        return out.astype(q.dtype)
+    return _attn_pallas(q, k, v, scale=scale, delta=delta, causal=causal,
+                        binarize_scores=binarize_scores,
+                        block_q=block_q, block_k=block_k)
 
 
-def _surrogate_fwd(q, k, v, delta, alpha, scale, causal, binarize_scores):
-    out = _spike_attention(q, k, v, delta, alpha, scale, causal,
-                           binarize_scores)
+def _binary_fwd(q, k, v, delta, alpha, scale, causal, binarize_scores,
+                use_popcount, block_q, block_k):
+    out = _binary_attention(q, k, v, delta, alpha, scale, causal,
+                            binarize_scores, use_popcount, block_q, block_k)
     return out, (q, k, v, delta, alpha)
 
 
-def _jnp_attention(q, k, v, delta, alpha, scale, causal, binarize_scores):
-    s = jnp.einsum("blhd,bmhd->bhlm", q.astype(jnp.float32),
-                   k.astype(jnp.float32)) * scale
+def _jnp_folded(q, k, v, delta, alpha, scale, causal, binarize_scores):
+    """Pure-jnp surrogate-gradient oracle on the folded (BH, L, D) layout."""
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
     a = binarize(s, delta, alpha) if binarize_scores else s
     if causal:
         l = q.shape[1]
         mask = jnp.tril(jnp.ones((l, l), bool))
-        a = jnp.where(mask[None, None], a, 0.0)
-    out = jnp.einsum("bhlm,bmhd->blhd", a, v.astype(jnp.float32))
+        a = jnp.where(mask[None], a, 0.0)
+    out = jnp.einsum("bqk,bkd->bqd", a, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
     return out.astype(q.dtype)
 
 
-def _surrogate_bwd(scale, causal, binarize_scores, res, g):
+def _binary_bwd(scale, causal, binarize_scores, use_popcount, block_q,
+                block_k, res, g):
     q, k, v, delta, alpha = res
     _, vjp = jax.vjp(
-        lambda q_, k_, v_, d_: _jnp_attention(q_, k_, v_, d_, alpha, scale,
-                                              causal, binarize_scores),
+        lambda q_, k_, v_, d_: _jnp_folded(q_, k_, v_, d_, alpha, scale,
+                                           causal, binarize_scores),
         q, k, v, delta)
     dq, dk, dv, dd = vjp(g)
     return dq, dk, dv, dd, None
 
 
-_spike_attention.defvjp(_surrogate_fwd, _surrogate_bwd)
+_binary_attention.defvjp(_binary_fwd, _binary_bwd)
+
+
+def binary_attention(q, k, v, *, scale: float, delta, alpha: float = 4.0,
+                     causal: bool = False, binarize_scores: bool = True,
+                     use_popcount: bool = False,
+                     block_q: int = 128, block_k: int = 128):
+    """Folded-layout binary attention: q/k/v (BH, L, D) spike tensors.
+
+    Forward runs the fused MXU Pallas kernel (``use_popcount=False``) or
+    the bit-packed AND-PopCount score kernel (``use_popcount=True``);
+    backward recomputes with surrogate gradients. This is the entry the
+    binary-engine dispatch (core/engine.resolve_binary_mode) targets.
+    """
+    delta = jnp.asarray(delta, jnp.float32)
+    return _binary_attention(q, k, v, delta, alpha, scale, causal,
+                             binarize_scores, use_popcount,
+                             block_q, block_k)
 
 
 def spike_attention(q, k, v, *, scale: float, delta, alpha: float = 4.0,
                     causal: bool = False, binarize_scores: bool = True):
     """Model-layout fused binary attention: q/k/v (B', L, H, D)."""
-    delta = jnp.asarray(delta, jnp.float32)
-    return _spike_attention(q, k, v, delta, alpha, scale, causal,
-                            binarize_scores)
+    b, l, h, d = q.shape
+    fold = lambda u: u.transpose(0, 2, 1, 3).reshape(b * h, l, d)
+    out = binary_attention(fold(q), fold(k), fold(v), scale=scale,
+                           delta=delta, alpha=alpha, causal=causal,
+                           binarize_scores=binarize_scores)
+    return out.reshape(b, h, l, d).transpose(0, 2, 1, 3)
 
 
 # ---------------------------------------------------------------------------

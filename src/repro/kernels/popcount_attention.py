@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.bitpack import pad_to_multiple
+
 
 def _kernel(q_ref, k_ref, o_ref):
     q = q_ref[0]                                   # (bq, W) uint32
@@ -33,17 +35,25 @@ def _kernel(q_ref, k_ref, o_ref):
 def popcount_scores(q_packed: jax.Array, k_packed: jax.Array, *,
                     block_q: int = 128, block_k: int = 128,
                     interpret: Optional[bool] = None) -> jax.Array:
-    """(BH, Lq, W) x (BH, Lk, W) uint32 -> (BH, Lq, Lk) int32 counts."""
+    """(BH, Lq, W) x (BH, Lk, W) uint32 -> (BH, Lq, Lk) int32 counts.
+
+    Lq / Lk that don't divide the blocks are zero-padded (all-zero words
+    popcount to 0) and the count matrix is sliced back — serve prompts
+    are rarely block-multiples.
+    """
     bh, lq, w = q_packed.shape
     _, lk, _ = k_packed.shape
     block_q = min(block_q, lq)
     block_k = min(block_k, lk)
-    assert lq % block_q == 0 and lk % block_k == 0
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
-    grid = (bh, lq // block_q, lk // block_k)
-    return pl.pallas_call(
+    qp = pad_to_multiple(q_packed, 1, block_q)
+    kp = pad_to_multiple(k_packed, 1, block_k)
+    lqp, lkp = qp.shape[1], kp.shape[1]
+
+    grid = (bh, lqp // block_q, lkp // block_k)
+    out = pl.pallas_call(
         _kernel,
         grid=grid,
         in_specs=[
@@ -52,6 +62,7 @@ def popcount_scores(q_packed: jax.Array, k_packed: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((1, block_q, block_k),
                                lambda b, qi, ki: (b, qi, ki)),
-        out_shape=jax.ShapeDtypeStruct((bh, lq, lk), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((bh, lqp, lkp), jnp.int32),
         interpret=interpret,
-    )(q_packed, k_packed)
+    )(qp, kp)
+    return out[:, :lq, :lk]

@@ -16,13 +16,15 @@ def spike_attention_ref(q, k, v, *, scale: float, delta, causal: bool,
     """Fused binary attention oracle.
 
     q, k, v: (B, H, L, D) spike tensors ({0,1} values, float dtype).
-    scores = (q @ k^T) * scale; attn = 1[scores > delta]; out = attn @ v.
+    scores = (q @ k^T) * scale; attn = spike(scores - delta); out = attn @ v.
     No softmax (spiking attention, paper Eq. 2 + binary attention [17]).
+    The threshold compare is ``(s - delta) >= 0`` — the exact expression
+    of ``core.spiking.binarize`` — so all engine modes agree on ties.
     """
     s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
     if binarize_scores:
-        a = (s > delta).astype(jnp.float32)
+        a = (s - delta >= 0).astype(jnp.float32)
     else:
         a = s
     if causal:

@@ -29,6 +29,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.bitpack import pad_to_multiple
+
 
 def _kernel(delta_ref, q_ref, k_ref, v_ref, o_ref, *, scale: float,
             causal: bool, binarize: bool, block_q: int, block_k: int):
@@ -46,7 +48,10 @@ def _kernel(delta_ref, q_ref, k_ref, v_ref, o_ref, *, scale: float,
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32) * scale   # (bq, bk)
         if binarize:
-            a = (s > delta_ref[0, 0]).astype(jnp.float32)
+            # spike(s - delta): identical expression to core.spiking
+            # .binarize so kernel and jnp engine modes agree to the bit,
+            # ties included (s >= delta via the subtraction's sign).
+            a = (s - delta_ref[0, 0] >= 0).astype(jnp.float32)
         else:
             a = s
         if causal:
@@ -76,16 +81,28 @@ def spike_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     block_q: int = 128, block_k: int = 128,
                     interpret: Optional[bool] = None) -> jax.Array:
     """q, k, v: (BH, L, D) binary spike tensors. Returns (BH, L, D) fp32
-    accumulated context, cast back to q.dtype."""
+    accumulated context, cast back to q.dtype.
+
+    L that doesn't divide the blocks is zero-padded: padded KV rows carry
+    ``v == 0`` so whatever their (possibly binarized-to-1) attention
+    weight, they add exact fp32 zeros to the context; padded Q rows are
+    sliced off. The causal mask uses absolute padded positions, which
+    agree with the real positions on every surviving entry — so padding
+    is invisible bit-for-bit, causal or not.
+    """
     bh, l, d = q.shape
     block_q = min(block_q, l)
     block_k = min(block_k, l)
-    assert l % block_q == 0 and l % block_k == 0, (l, block_q, block_k)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     delta_arr = jnp.asarray(delta, jnp.float32).reshape(1, 1)
 
-    grid = (bh, l // block_q, l // block_k)
+    qp = pad_to_multiple(q, 1, block_q)
+    kp = pad_to_multiple(k, 1, block_k)
+    vp = pad_to_multiple(v, 1, block_k)
+    lq, lk = qp.shape[1], kp.shape[1]
+
+    grid = (bh, lq // block_q, lk // block_k)
     out = pl.pallas_call(
         functools.partial(_kernel, scale=scale, causal=causal,
                           binarize=binarize_scores,
@@ -98,7 +115,7 @@ def spike_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pl.BlockSpec((1, block_k, d), lambda b, qi, ki: (b, ki, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, l, d), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((bh, lq, d), jnp.float32),
         interpret=interpret,
-    )(delta_arr, q, k, v)
-    return out.astype(q.dtype)
+    )(delta_arr, qp, kp, vp)
+    return out[:, :l].astype(q.dtype)

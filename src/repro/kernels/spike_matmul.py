@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.bitpack import pad_to_multiple
+
 
 def _kernel(occ_ref, s_ref, w_ref, o_ref):
     ki = pl.program_id(2)
@@ -76,15 +78,6 @@ def block_occupancy(s: jax.Array, block_m: int, block_k: int) -> jax.Array:
     return occ.astype(jnp.int32)
 
 
-def _pad_dim(x: jax.Array, axis: int, mult: int) -> jax.Array:
-    pad = (-x.shape[axis]) % mult
-    if not pad:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
-
-
 def spike_matmul(s: jax.Array, w: jax.Array, *,
                  bias: Optional[jax.Array] = None,
                  block_m: int = 128, block_n: int = 128, block_k: int = 128,
@@ -106,8 +99,8 @@ def spike_matmul(s: jax.Array, w: jax.Array, *,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
-    sp = _pad_dim(_pad_dim(s, 0, block_m), 1, block_k)
-    wp = _pad_dim(_pad_dim(w, 0, block_k), 1, block_n)
+    sp = pad_to_multiple(pad_to_multiple(s, 0, block_m), 1, block_k)
+    wp = pad_to_multiple(pad_to_multiple(w, 0, block_k), 1, block_n)
     mp, kp = sp.shape
     np_ = wp.shape[1]
     occ = block_occupancy(sp, block_m, block_k) if occupancy is None \
@@ -126,7 +119,7 @@ def spike_matmul(s: jax.Array, w: jax.Array, *,
         kernel = functools.partial(_kernel_bias, nk=grid[2])
         in_specs.append(pl.BlockSpec((1, block_n),
                                      lambda mi, ni, ki: (0, ni)))
-        operands.append(_pad_dim(bias.reshape(1, n), 1, block_n))
+        operands.append(pad_to_multiple(bias.reshape(1, n), 1, block_n))
     out = pl.pallas_call(
         kernel,
         grid=grid,

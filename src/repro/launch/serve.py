@@ -9,7 +9,11 @@ version of prefill/serve_step is exercised by dryrun.py):
   * continuous batching: a slot-based scheduler — finished sequences free
     their slot, queued requests claim it (slot state lives in the cache
     batch dim);
-  * greedy sampling (argmax) for determinism.
+  * greedy sampling (argmax) for determinism;
+  * spiking LMs (``--arch spikingformer-lm``) decode against a
+    *bit-packed* spike KV cache (uint32 words, AND-PopCount scoring —
+    the paper's 32x spike-RAM compression); the server reports the
+    measured cache footprint vs the unpacked layout.
 """
 from __future__ import annotations
 
@@ -51,6 +55,23 @@ class BatchedServer:
         self.slot_pos = np.zeros(slots, np.int32)
         self.queue: List[Request] = []
         self.completed: List[Request] = []
+
+    def kv_cache_stats(self) -> Dict[str, float]:
+        """Measured KV footprint; 'compression' is the ratio vs storing
+        the same entries unpacked in the activation dtype (32x per word
+        when the spiking packed-KV path is on, 1.0 otherwise)."""
+        leaves = jax.tree_util.tree_leaves(self.cache)
+        kv_bytes = sum(l.nbytes for l in leaves
+                       if l.dtype != jnp.int32)          # skip pos tags
+        act_bytes = jnp.dtype(self.cfg.dtype).itemsize
+        packed = any(l.dtype == jnp.uint32 for l in leaves)
+        if packed:
+            words = -(-self.cfg.head_dim // 32)
+            unpacked = kv_bytes // 4 // words * self.cfg.head_dim * act_bytes
+        else:
+            unpacked = kv_bytes
+        return {"kv_bytes": kv_bytes, "packed": packed,
+                "compression": unpacked / max(1, kv_bytes)}
 
     def submit(self, req: Request):
         self.queue.append(req)
@@ -121,6 +142,9 @@ def main():
             rid=i, prompt=rng.integers(0, cfg.vocab_size,
                                        args.prompt_len).astype(np.int32),
             max_new_tokens=args.max_new))
+    kv = server.kv_cache_stats()
+    print(f"[serve] kv cache {kv['kv_bytes']/1024:.1f} KiB "
+          f"(packed={kv['packed']}, {kv['compression']:.0f}x vs unpacked)")
     t0 = time.time()
     steps = 0
     while server.step():

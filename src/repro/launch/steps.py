@@ -1,6 +1,12 @@
 """Step builders: train_step / prefill_step / serve_step per architecture,
 plus ``input_specs`` (ShapeDtypeStruct stand-ins for every model input —
 weak-type-correct, shardable, no device allocation).
+
+Every builder wraps its forward in ``engine_scope(cfg)``: one ambient
+engine policy (ModelConfig.engine) covers both halves of the dual-engine
+overlay — spike matmuls (dense vs block-sparse) *and* spiking attention
+(jnp vs MXU kernel vs popcount) — so models carry no engine plumbing and
+a single config knob flips the whole hot path (DESIGN.md §4).
 """
 from __future__ import annotations
 

@@ -176,14 +176,14 @@ def _ssa(p, st, cfg: ModelConfig, x, train: bool):
     q_s = proj("q", "wq").reshape(t, b, l, cfg.num_heads, cfg.head_dim)
     k_s = proj("k", "wk").reshape(t, b, l, cfg.num_heads, cfg.head_dim)
     v_s = proj("v", "wv").reshape(t, b, l, cfg.num_heads, cfg.head_dim)
-    # (T,B,L,H,hd) -> (T*B, H, L, hd) for the binary-attention primitive
+    # (T,B,L,H,hd) -> (T*B, H, L, hd) for the binary-attention primitive;
+    # engine selection (jnp / MXU kernel / popcount) is ambient — the step
+    # builders install ModelConfig.engine, the model stays plumbing-free.
     fold = lambda u: u.reshape(t * b, l, cfg.num_heads,
                                cfg.head_dim).transpose(0, 2, 1, 3)
     from repro.core.attention import spiking_attention
     ctx = spiking_attention(fold(q_s), fold(k_s), fold(v_s), cfg.spiking,
-                            delta_score=p["delta"],
-                            use_kernel=getattr(cfg.spiking, "use_kernel",
-                                               False))
+                            delta_score=p["delta"])
     ctx = ctx.transpose(0, 2, 1, 3).reshape(t, b, l, cfg.q_dim)
     # ctx is binarized-attention output: sparse integer counts, not {0,1}
     # spikes — but zero blocks are zero blocks, so the sparse engine skips

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.bitpack import pack_bits, unpack_bits
 from repro.core.spiking import binarize, lif_scan
 from repro.parallel.sharding import constrain
 from . import nn
@@ -119,6 +120,18 @@ def _attend_full_seq(cfg: ModelConfig, kind: str, q, k, v, delta=None):
     """kind: 'full' | 'window'. Shapes (B', S, H/KH, hd)."""
     window = cfg.window if kind == "window" else None
     if cfg.spiking is not None:
+        if window is None:
+            # binary-engine dispatch (jnp / MXU kernel / popcount) via the
+            # ambient engine; (B', S, H, hd) -> (B', H, S, hd) puts (S, hd)
+            # in the primitive's trailing position. KV heads are already
+            # repeated to H here (repeat_kv=True in _project_qkv).
+            from repro.core.attention import spiking_attention
+            swap = lambda u: u.transpose(0, 2, 1, 3)
+            ctx = spiking_attention(swap(q), swap(k), swap(v), cfg.spiking,
+                                    delta_score=delta, causal=True)
+            return swap(ctx)
+        # sliding-window spiking SSA keeps the banded jnp dataflow (the
+        # fused kernel's block skip is causal-only for now)
         return nn.binary_flash_attention(
             q, k, v, delta=delta, alpha=cfg.spiking.surrogate_alpha,
             causal=True, window=window,
@@ -221,13 +234,30 @@ def _cache_len(cfg: ModelConfig, kind: str, max_len: int) -> int:
     return min(cfg.window, max_len) if kind == "window" else max_len
 
 
+def _packed_kv(cfg: ModelConfig) -> bool:
+    """Spiking decode caches store K/V bit-packed (uint32 words) when the
+    config's engine asks for it — the paper's 32x spike-RAM compression
+    (byte-level SRAM dataflow) carried to the serve path. Cache layout is
+    static per config, so this reads ``cfg.engine`` directly rather than
+    the ambient engine."""
+    return (cfg.spiking is not None and cfg.engine is not None
+            and cfg.engine.packed_kv)
+
+
 def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
                batch=None, params=None) -> Dict[str, Any]:
     dt = jnp.dtype(cfg.dtype)
     b = batch_size * (cfg.spiking.time_steps if cfg.spiking else 1)
+    packed = _packed_kv(cfg)
+    words = -(-cfg.head_dim // 32)
 
     def kv(n_layers, kind):
         s = _cache_len(cfg, kind, max_len)
+        if packed:
+            shape = (n_layers, b, s, cfg.num_kv_heads, words)
+            return {"k": jnp.zeros(shape, jnp.uint32),
+                    "v": jnp.zeros(shape, jnp.uint32),
+                    "pos": jnp.full((n_layers, s), -1, jnp.int32)}
         return {
             "k": jnp.zeros((n_layers, b, s, cfg.num_kv_heads, cfg.head_dim), dt),
             "v": jnp.zeros((n_layers, b, s, cfg.num_kv_heads, cfg.head_dim), dt),
@@ -255,7 +285,14 @@ def _decode_layer(p, cfg: ModelConfig, x, cache_l, pos, kind: str):
             s, _ = lif_scan(u_t, cfg.spiking)
             return s.reshape(-1, *u.shape[1:])
         q, k, v = lif_t(q), lif_t(k), lif_t(v)
+    else:
+        lif_t = None
     window = cfg.window if kind == "window" else None
+    packed = _packed_kv(cfg)
+    if packed:
+        # spikes pack losslessly: K/V are {0,1} after the LIF, one uint32
+        # word per 32 channels (the binary engine's spike-RAM layout)
+        k, v = pack_bits(k), pack_bits(v)
     s_len = cache_l["k"].shape[1]
     slot = pos % s_len  # rolling write for window caches; == pos for full
     k_cache = jax.lax.dynamic_update_slice_in_dim(cache_l["k"], k, slot, 1)
@@ -265,14 +302,26 @@ def _decode_layer(p, cfg: ModelConfig, x, cache_l, pos, kind: str):
     if cfg.spiking is not None:
         qf = q.reshape(q.shape[0], cfg.num_kv_heads,
                        cfg.num_heads // cfg.num_kv_heads, cfg.head_dim)
-        sc = jnp.einsum("bgrd,bkgd->bgrk", qf.astype(jnp.float32),
-                        k_cache.astype(jnp.float32)) / math.sqrt(cfg.head_dim)
+        if packed:
+            # AND-PopCount against the packed cache: exact integer overlap
+            # counts, bit-identical to the fp32 dot on unpacked spikes
+            qp = pack_bits(qf)                       # (B', KH, rep, W)
+            kcT = k_cache.transpose(0, 2, 1, 3)      # (B', KH, S, W)
+            counts = jax.lax.population_count(
+                qp[:, :, :, None, :] & kcT[:, :, None, :, :]).sum(
+                axis=-1).astype(jnp.int32)           # (B', KH, rep, S)
+            sc = counts.astype(jnp.float32) / math.sqrt(cfg.head_dim)
+        else:
+            sc = jnp.einsum("bgrd,bkgd->bgrk", qf.astype(jnp.float32),
+                            k_cache.astype(jnp.float32)) / math.sqrt(cfg.head_dim)
         a = binarize(sc, p["delta"], cfg.spiking.surrogate_alpha)
         valid = (entry_pos >= 0) & (entry_pos <= pos)
         if window is not None:
             valid &= entry_pos > pos - window
         a = jnp.where(valid[None, None, None, :], a, 0.0)
-        attn = jnp.einsum("bgrk,bkgd->bgrd", a, v_cache.astype(jnp.float32))
+        vc = unpack_bits(v_cache, cfg.head_dim) if packed \
+            else v_cache.astype(jnp.float32)
+        attn = jnp.einsum("bgrk,bkgd->bgrd", a, vc)
         attn = attn.reshape(x.shape[0], 1, cfg.q_dim).astype(x.dtype)
     else:
         attn = nn.decode_attention(q, k_cache, v_cache, entry_pos=entry_pos,
@@ -280,7 +329,13 @@ def _decode_layer(p, cfg: ModelConfig, x, cache_l, pos, kind: str):
         attn = attn.reshape(x.shape[0], 1, cfg.q_dim)
     x = x + nn.linear(p["wo"], attn)
     h2 = nn.rmsnorm(p["ln2"], x, cfg.norm_eps)
-    x = x + nn.mlp(p["mlp"], h2, cfg.act)
+    if cfg.spiking is not None:
+        # mirror the full-seq spiking MLP (up -> LIF -> down, no gate/act)
+        # so decode stays consistent with prefill token-for-token
+        up = nn.linear(p["mlp"]["up"], h2)
+        x = x + nn.linear(p["mlp"]["down"], lif_t(up))
+    else:
+        x = x + nn.mlp(p["mlp"], h2, cfg.act)
     new_cache = {"k": k_cache, "v": v_cache, "pos": entry_pos}
     return x, new_cache
 
