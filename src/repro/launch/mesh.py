@@ -22,3 +22,15 @@ def make_host_mesh():
     """Whatever devices exist locally, as a 1D 'data' mesh (CPU tests)."""
     n = len(jax.devices())
     return jax.make_mesh((n,), ("data",))
+
+
+def make_serve_mesh(data: int = 1, model: int = 1):
+    """Serving mesh: request slots on 'data', attention heads / vocab on
+    'model'. Sized explicitly (not all-local-devices) so the serve bench
+    can sweep mesh shapes under a forced host device count."""
+    n = len(jax.devices())
+    if data * model > n:
+        raise ValueError(f"serve mesh {data}x{model} needs {data * model} "
+                         f"devices, have {n} (set XLA_FLAGS="
+                         f"--xla_force_host_platform_device_count=N)")
+    return jax.make_mesh((data, model), ("data", "model"))

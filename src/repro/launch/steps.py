@@ -163,6 +163,21 @@ def build_serve_step(cfg: ModelConfig) -> Callable:
     return serve_step
 
 
+def build_batched_serve_step(cfg: ModelConfig) -> Callable:
+    """Continuous-batching orchestrator step (slotted-decode families):
+    (params, cache, tokens (B,C), pos (B,), n_tok (B,)) ->
+    (logits (B,C,V), new_cache). Every slot runs its own timeline — pos is
+    per-slot, and a row's tokens beyond n_tok are padding (a decode slot
+    rides a chunked-prefill wave contributing a single real token)."""
+    def serve_step(params, cache, tokens, pos, n_tok):
+        with engine_scope(cfg):
+            logits, new_cache = registry.decode_step(params, cfg, cache,
+                                                     tokens, pos,
+                                                     n_tok=n_tok)
+        return logits, new_cache
+    return serve_step
+
+
 def step_for_shape(cfg: ModelConfig, shape: RunShape,
                    optimizer: Optional[Optimizer] = None) -> Callable:
     if shape.mode == "train":

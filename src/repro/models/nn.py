@@ -350,28 +350,39 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
                      entry_pos: jax.Array, cur_pos: jax.Array,
                      window: Optional[int] = None,
                      scale: Optional[float] = None) -> jax.Array:
-    """Single-token attention against a (possibly rolling) KV cache.
+    """Attention for a short query span against a (possibly rolling) KV
+    cache — one decode token or a chunked-prefill bite.
 
-    q: (B, 1, H, D); k_cache/v_cache: (B, S, KH, D);
+    q: (B, Lq, H, D); k_cache/v_cache: (B, S, KH, D);
     entry_pos: (S,) or (B, S) absolute position of each cache entry (-1 =
-    empty); cur_pos: current absolute position (scalar int).
+    empty); cur_pos: absolute position of each query — scalar (all rows,
+    Lq == 1), (B,) per-row first-query position, or (B, Lq) explicit.
+    Causality comes entirely from the entry_pos <= query-position mask, so
+    per-row positions give every batch row its own timeline.
     """
-    b, _, h, d = q.shape
+    b, lq, h, d = q.shape
     _, s_len, kh, _ = k_cache.shape
     rep = h // kh
     scale = (1.0 / math.sqrt(d)) if scale is None else scale
     if entry_pos.ndim == 1:
         entry_pos = entry_pos[None]
-    qf = q.reshape(b, kh, rep, d).astype(jnp.float32)
-    sc = jnp.einsum("bgrd,bkgd->bgrk", qf,
+    qpos = jnp.asarray(cur_pos)
+    if qpos.ndim == 0:
+        qpos = qpos[None, None]
+    elif qpos.ndim == 1:
+        qpos = qpos[:, None] + jnp.arange(lq)
+    qpos = jnp.broadcast_to(qpos, (b, lq))
+    qf = q.reshape(b, lq, kh, rep, d).astype(jnp.float32)
+    sc = jnp.einsum("bqgrd,bkgd->bqgrk", qf,
                     k_cache.astype(jnp.float32)) * scale
-    valid = (entry_pos >= 0) & (entry_pos <= cur_pos)
+    valid = (entry_pos[:, None, :] >= 0) & \
+        (entry_pos[:, None, :] <= qpos[:, :, None])
     if window is not None:
-        valid &= entry_pos > cur_pos - window
-    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+        valid &= entry_pos[:, None, :] > qpos[:, :, None] - window
+    sc = jnp.where(valid[:, :, None, None, :], sc, NEG_INF)
     p = jax.nn.softmax(sc, axis=-1)
-    out = jnp.einsum("bgrk,bkgd->bgrd", p, v_cache.astype(jnp.float32))
-    return out.reshape(b, 1, h, d).astype(q.dtype)
+    out = jnp.einsum("bqgrk,bkgd->bqgrd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, lq, h, d).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------

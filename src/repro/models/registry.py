@@ -33,6 +33,11 @@ NO_LONG_CONTEXT = {"nemotron-4-15b", "granite-20b", "whisper-small",
                    "kimi-k2-1t-a32b", "deepseek-moe-16b"}
 # families without an autoregressive decode step
 NO_DECODE = {"spikingformer", "cifarnet"}
+# families whose decode_step carries per-slot state: vectorized positions
+# (pos: (B,)), per-slot cache validity tags, chunked multi-token bites
+# (n_tok), and slot invalidation — the contract the continuous-batching
+# orchestrator (launch/serve.py) requires
+SLOTTED_DECODE = {"dense", "vlm"}
 
 
 def family_module(cfg: ModelConfig) -> ModuleType:
@@ -51,17 +56,37 @@ def forward(params, cfg: ModelConfig, batch, *, train: bool = False, **kw):
 
 
 def init_cache(cfg: ModelConfig, batch_size: int, max_len: int, batch=None,
-               params=None):
-    return family_module(cfg).init_cache(cfg, batch_size, max_len,
-                                         batch=batch, params=params)
+               params=None, chunk_headroom: int = 0):
+    mod = family_module(cfg)
+    if chunk_headroom:
+        assert supports_slots(cfg), \
+            f"{cfg.family} decode takes no chunked-prefill bites"
+        return mod.init_cache(cfg, batch_size, max_len, batch=batch,
+                              params=params, chunk_headroom=chunk_headroom)
+    return mod.init_cache(cfg, batch_size, max_len, batch=batch,
+                          params=params)
 
 
-def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
-    return family_module(cfg).decode_step(params, cfg, cache, tokens, pos)
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, n_tok=None):
+    mod = family_module(cfg)
+    if n_tok is not None:
+        return mod.decode_step(params, cfg, cache, tokens, pos, n_tok=n_tok)
+    return mod.decode_step(params, cfg, cache, tokens, pos)
+
+
+def invalidate_slots(cfg: ModelConfig, cache, slot_mask):
+    """Reset the validity tags of masked slots (continuous-batching
+    admission). Slotted-decode families only."""
+    assert supports_slots(cfg), f"{cfg.family} has no per-slot decode state"
+    return family_module(cfg).invalidate_slots(cache, slot_mask)
 
 
 def has_decode(cfg: ModelConfig) -> bool:
     return cfg.family not in NO_DECODE
+
+
+def supports_slots(cfg: ModelConfig) -> bool:
+    return cfg.family in SLOTTED_DECODE
 
 
 def init_state(cfg: ModelConfig):

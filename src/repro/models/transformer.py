@@ -230,8 +230,18 @@ def forward(params, cfg: ModelConfig, batch, *, train: bool = False,
 # ---------------------------------------------------------------------------
 
 
-def _cache_len(cfg: ModelConfig, kind: str, max_len: int) -> int:
-    return min(cfg.window, max_len) if kind == "window" else max_len
+def _cache_len(cfg: ModelConfig, kind: str, max_len: int,
+               headroom: int = 0) -> int:
+    """Ring length for a cache of this kind. ``headroom`` (chunked
+    prefill) widens window rings by up to chunk-1 extra slots: a C-token
+    bite is scattered *before* attention runs, and with a bare
+    ``window``-long ring its later writes would evict entries still
+    inside earlier in-bite queries' windows (write at pos p+i lands on
+    the slot holding p+i-s_len, which query p+j needs iff
+    p+i-s_len > p+j-window — impossible once s_len >= window + C - 1)."""
+    if kind != "window":
+        return max_len
+    return min(cfg.window + headroom, max_len)
 
 
 def _packed_kv(cfg: ModelConfig) -> bool:
@@ -245,23 +255,31 @@ def _packed_kv(cfg: ModelConfig) -> bool:
 
 
 def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
-               batch=None, params=None) -> Dict[str, Any]:
+               batch=None, params=None,
+               chunk_headroom: int = 0) -> Dict[str, Any]:
+    """``chunk_headroom``: extra ring slots for window caches when decode
+    will be fed chunked-prefill bites wider than one token (pass
+    max_chunk - 1; see _cache_len)."""
     dt = jnp.dtype(cfg.dtype)
     b = batch_size * (cfg.spiking.time_steps if cfg.spiking else 1)
     packed = _packed_kv(cfg)
     words = -(-cfg.head_dim // 32)
 
     def kv(n_layers, kind):
-        s = _cache_len(cfg, kind, max_len)
+        s = _cache_len(cfg, kind, max_len, chunk_headroom)
+        # validity tags carry a batch (slot) dimension: every slot has its
+        # own timeline, so continuous batching can hold sequences at
+        # different positions in the same cache (the serve orchestrator's
+        # per-slot state; a freed slot is re-admitted with all tags -1)
         if packed:
             shape = (n_layers, b, s, cfg.num_kv_heads, words)
             return {"k": jnp.zeros(shape, jnp.uint32),
                     "v": jnp.zeros(shape, jnp.uint32),
-                    "pos": jnp.full((n_layers, s), -1, jnp.int32)}
+                    "pos": jnp.full((n_layers, batch_size, s), -1, jnp.int32)}
         return {
             "k": jnp.zeros((n_layers, b, s, cfg.num_kv_heads, cfg.head_dim), dt),
             "v": jnp.zeros((n_layers, b, s, cfg.num_kv_heads, cfg.head_dim), dt),
-            "pos": jnp.full((n_layers, s), -1, jnp.int32),
+            "pos": jnp.full((n_layers, batch_size, s), -1, jnp.int32),
         }
 
     if cfg.attn_type == "local_global":
@@ -272,10 +290,36 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
     return {"layers": kv(cfg.num_layers, kind)}
 
 
-def _decode_layer(p, cfg: ModelConfig, x, cache_l, pos, kind: str):
-    """x: (B', 1, D); cache_l: {'k','v','pos'} for this layer."""
+def _scatter_rows(cache, new, slots):
+    """Per-row cache write: cache (B', S, ...), new (B', C, ...), slots
+    (B', C) int32 — row b writes new[b, i] at cache[b, slots[b, i]].
+    Out-of-range slot indices (== S, the padding sentinel) are dropped, so
+    padded chunk positions never touch the cache."""
+    return jax.vmap(lambda c, n, s: c.at[s].set(n, mode="drop"))(
+        cache, new, slots)
+
+
+def _decode_layer(p, cfg: ModelConfig, x, cache_l, pos, n_tok, kind: str):
+    """One decode token or a chunked-prefill bite against this layer's KV
+    cache, with a *per-slot* timeline.
+
+    x: (B', C, D) — B' = B (dense) or T_s*B (spiking, time-major fold);
+    cache_l: {'k','v','pos'} for this layer, pos tags shaped (B, S);
+    pos: (B,) absolute position of x[:, 0] per slot;
+    n_tok: (B,) count of real tokens per slot (rows are right-padded to
+    the common chunk width C; padded positions are neither written to the
+    cache nor tagged valid, so a decode slot rides a prefill wave at C=1
+    cost in cache state).
+    """
+    b = pos.shape[0]
+    b_rows, c = x.shape[0], x.shape[1]
+    reps_t = b_rows // b                       # T_s in spiking mode, else 1
+    tile = (lambda u: jnp.tile(u, (reps_t,) + (1,) * (u.ndim - 1))) \
+        if reps_t > 1 else (lambda u: u)
+    qpos = pos[:, None] + jnp.arange(c)        # (B, C) absolute q positions
+    qpos_rows = tile(qpos)                     # (B', C)
     h = nn.rmsnorm(p["ln1"], x, cfg.norm_eps)
-    q, k, v = _project_qkv(p, cfg, h, jnp.full((1,), pos))
+    q, k, v = _project_qkv(p, cfg, h, qpos_rows)
     if cfg.spiking is not None:
         # T_s is folded into the batch dim; unfold for LIF dynamics over time.
         t = cfg.spiking.time_steps
@@ -294,39 +338,44 @@ def _decode_layer(p, cfg: ModelConfig, x, cache_l, pos, kind: str):
         # word per 32 channels (the binary engine's spike-RAM layout)
         k, v = pack_bits(k), pack_bits(v)
     s_len = cache_l["k"].shape[1]
-    slot = pos % s_len  # rolling write for window caches; == pos for full
-    k_cache = jax.lax.dynamic_update_slice_in_dim(cache_l["k"], k, slot, 1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(cache_l["v"], v, slot, 1)
-    entry_pos = jax.lax.dynamic_update_slice_in_dim(
-        cache_l["pos"], jnp.full((1,), pos, jnp.int32), slot, 0)
+    # rolling write for window caches (== pos for full); chunk width must
+    # not exceed the window, or a bite would overwrite its own entries
+    slot = jnp.where(jnp.arange(c)[None, :] < n_tok[:, None],
+                     qpos % s_len, s_len).astype(jnp.int32)  # (B, C)
+    slot_rows = tile(slot)
+    k_cache = _scatter_rows(cache_l["k"], k, slot_rows)
+    v_cache = _scatter_rows(cache_l["v"], v, slot_rows)
+    entry_pos = jax.vmap(lambda e, s, val: e.at[s].set(val, mode="drop"))(
+        cache_l["pos"], slot, qpos.astype(jnp.int32))
     if cfg.spiking is not None:
-        qf = q.reshape(q.shape[0], cfg.num_kv_heads,
+        qf = q.reshape(b_rows, c, cfg.num_kv_heads,
                        cfg.num_heads // cfg.num_kv_heads, cfg.head_dim)
         if packed:
             # AND-PopCount against the packed cache: exact integer overlap
             # counts, bit-identical to the fp32 dot on unpacked spikes
-            qp = pack_bits(qf)                       # (B', KH, rep, W)
+            qp = pack_bits(qf)                       # (B', C, KH, rep, W)
             kcT = k_cache.transpose(0, 2, 1, 3)      # (B', KH, S, W)
             counts = jax.lax.population_count(
-                qp[:, :, :, None, :] & kcT[:, :, None, :, :]).sum(
-                axis=-1).astype(jnp.int32)           # (B', KH, rep, S)
+                qp[:, :, :, :, None, :] & kcT[:, None, :, None, :, :]).sum(
+                axis=-1).astype(jnp.int32)           # (B', C, KH, rep, S)
             sc = counts.astype(jnp.float32) / math.sqrt(cfg.head_dim)
         else:
-            sc = jnp.einsum("bgrd,bkgd->bgrk", qf.astype(jnp.float32),
+            sc = jnp.einsum("bcgrd,bkgd->bcgrk", qf.astype(jnp.float32),
                             k_cache.astype(jnp.float32)) / math.sqrt(cfg.head_dim)
         a = binarize(sc, p["delta"], cfg.spiking.surrogate_alpha)
-        valid = (entry_pos >= 0) & (entry_pos <= pos)
+        valid = (entry_pos[:, None, :] >= 0) & \
+            (entry_pos[:, None, :] <= qpos[:, :, None])       # (B, C, S)
         if window is not None:
-            valid &= entry_pos > pos - window
-        a = jnp.where(valid[None, None, None, :], a, 0.0)
+            valid &= entry_pos[:, None, :] > qpos[:, :, None] - window
+        a = jnp.where(tile(valid)[:, :, None, None, :], a, 0.0)
         vc = unpack_bits(v_cache, cfg.head_dim) if packed \
             else v_cache.astype(jnp.float32)
-        attn = jnp.einsum("bgrk,bkgd->bgrd", a, vc)
-        attn = attn.reshape(x.shape[0], 1, cfg.q_dim).astype(x.dtype)
+        attn = jnp.einsum("bcgrk,bkgd->bcgrd", a, vc)
+        attn = attn.reshape(b_rows, c, cfg.q_dim).astype(x.dtype)
     else:
         attn = nn.decode_attention(q, k_cache, v_cache, entry_pos=entry_pos,
-                                   cur_pos=pos, window=window)
-        attn = attn.reshape(x.shape[0], 1, cfg.q_dim)
+                                   cur_pos=qpos, window=window)
+        attn = attn.reshape(b_rows, c, cfg.q_dim)
     x = x + nn.linear(p["wo"], attn)
     h2 = nn.rmsnorm(p["ln2"], x, cfg.norm_eps)
     if cfg.spiking is not None:
@@ -340,11 +389,21 @@ def _decode_layer(p, cfg: ModelConfig, x, cache_l, pos, kind: str):
     return x, new_cache
 
 
-def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
-    """tokens: (B, 1) int32; pos: scalar int32 (position being written).
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, n_tok=None):
+    """tokens: (B, C) int32 — one decode token per slot (C == 1) or a
+    chunked-prefill bite; pos: scalar or (B,) int32, the absolute position
+    of tokens[:, 0] per slot (a scalar broadcasts: all slots aligned, the
+    pre-orchestrator contract); n_tok: optional (B,) count of real tokens
+    per row when rows are right-padded to the common chunk width C.
 
-    Returns (logits (B, 1, V), new_cache).
+    Returns (logits (B, C, V), new_cache).
     """
+    b, c = tokens.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
+    n_tok = jnp.full((b,), c, jnp.int32) if n_tok is None \
+        else jnp.asarray(n_tok, jnp.int32)
     x = nn.embed(params["embed"], tokens)
     if cfg.spiking is not None:
         t = cfg.spiking.time_steps
@@ -361,12 +420,14 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
             for j in range(cfg.global_every):
                 sub = jax.tree_util.tree_map(lambda a: a[j], gp)
                 if j < n_local:
-                    c = jax.tree_util.tree_map(lambda a: a[j], c_loc)
-                    x, nc = _decode_layer(sub, cfg, x, c, pos, "window")
+                    cl = jax.tree_util.tree_map(lambda a: a[j], c_loc)
+                    x, nc = _decode_layer(sub, cfg, x, cl, pos, n_tok,
+                                          "window")
                     new_loc.append(nc)
                 else:
-                    c = jax.tree_util.tree_map(lambda a: a[0], c_glob)
-                    x, nc = _decode_layer(sub, cfg, x, c, pos, "full")
+                    cl = jax.tree_util.tree_map(lambda a: a[0], c_glob)
+                    x, nc = _decode_layer(sub, cfg, x, cl, pos, n_tok,
+                                          "full")
                     new_glob.append(nc)
             stack = lambda cs: jax.tree_util.tree_map(
                 lambda *a: jnp.stack(a), *cs)
@@ -385,8 +446,8 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
         kind = "window" if cfg.attn_type == "swa" else "full"
 
         def body(x, inp):
-            lp, c = inp
-            x, nc = _decode_layer(lp, cfg, x, c, pos, kind)
+            lp, cl = inp
+            x, nc = _decode_layer(lp, cfg, x, cl, pos, n_tok, kind)
             return x, nc
         x, new_layers = jax.lax.scan(body, x,
                                      (params["layers"], cache["layers"]))
@@ -401,3 +462,20 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
     else:
         logits = nn.linear(params["lm_head"], x).astype(jnp.float32)
     return logits, new_cache
+
+
+def invalidate_slots(cache, slot_mask):
+    """Free masked slots for re-admission: every validity tag of a masked
+    slot goes to -1, so the next occupant starts at position 0 attending
+    over nothing — the previous request's K/V rows become unreachable
+    (they are overwritten as the new sequence advances).
+
+    slot_mask: (B,) bool. K/V payloads are left in place (tags alone gate
+    attention), which keeps this a cheap tag-only write.
+    """
+    def fix(path, leaf):
+        if getattr(path[-1], "key", None) == "pos":
+            return jnp.where(slot_mask[None, :, None],
+                             jnp.int32(-1), leaf)
+        return leaf
+    return jax.tree_util.tree_map_with_path(fix, cache)

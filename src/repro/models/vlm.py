@@ -55,10 +55,16 @@ def forward(params, cfg: ModelConfig, batch, *, train: bool = False):
 
 
 def init_cache(cfg: ModelConfig, batch_size: int, max_len: int,
-               batch=None, params=None):
-    return transformer.init_cache(cfg, batch_size, max_len)
+               batch=None, params=None, chunk_headroom: int = 0):
+    return transformer.init_cache(cfg, batch_size, max_len,
+                                  chunk_headroom=chunk_headroom)
 
 
-def decode_step(params, cfg: ModelConfig, cache, tokens, pos):
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, n_tok=None):
     """Text-token continuation after a multimodal prefill."""
-    return transformer.decode_step(params, cfg, cache, tokens, pos)
+    return transformer.decode_step(params, cfg, cache, tokens, pos,
+                                   n_tok=n_tok)
+
+
+# cache layout is the transformer's -> same slot-invalidation tag write
+invalidate_slots = transformer.invalidate_slots

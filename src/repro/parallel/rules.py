@@ -143,15 +143,20 @@ def batch_axes(shape: RunShape, mesh: Mesh) -> Tuple[str, ...]:
     return tuple(axes)
 
 
+def dp_part(dp: Tuple[str, ...]):
+    """Normalize a DP-axis tuple to a PartitionSpec entry: () -> None,
+    one axis -> its name, several -> the tuple."""
+    return dp if len(dp) > 1 else (dp[0] if dp else None)
+
+
 def batch_partition(cfg: ModelConfig, shape: RunShape, mesh: Mesh,
                     batch_tree) -> Any:
     """Spec tree for a data batch (tokens / embeds / labels / images)."""
-    dp = batch_axes(shape, mesh)
-    dp_part = dp if len(dp) > 1 else (dp[0] if dp else None)
+    dp = dp_part(batch_axes(shape, mesh))
 
     def assign(path, leaf):
         nd = len(leaf.shape)
-        return P(*((dp_part,) + (None,) * (nd - 1))) if nd else P()
+        return P(*((dp,) + (None,) * (nd - 1))) if nd else P()
 
     return jax.tree_util.tree_map_with_path(assign, batch_tree)
 
@@ -191,4 +196,17 @@ def cache_partition(cfg: ModelConfig, shape: RunShape, mesh: Mesh,
         return P(*parts)
 
     rules = [(rx, materialize(spec)) for rx, spec in _CACHE_RULES_BASE]
-    return param_specs(abstract_cache, rules, default=P(), mesh=mesh)
+    specs = param_specs(abstract_cache, rules, default=P(), mesh=mesh)
+
+    # slotted-decode validity tags are (n_layers, B, s) — shard the slot
+    # dim with the batch like k/v. Shape-gated (not a regex rule) because
+    # legacy families still carry 2-d (n_layers, s) tags, and a
+    # right-aligned spec would land the batch axes on n_layers.
+    def fix_pos(path, leaf, spec):
+        if getattr(path[-1], "key", None) == "pos" and \
+                len(getattr(leaf, "shape", ())) == 3:
+            return fit_spec_to_shape(P(None, dp_part(dp), None),
+                                     leaf.shape, mesh)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(fix_pos, abstract_cache, specs)

@@ -209,6 +209,16 @@ def param_specs(params: Any, pattern_rules: Sequence[Tuple[str, P]],
     return jax.tree_util.tree_map_with_path(assign, params)
 
 
+def shard_put(tree: Any, spec_tree: Any, mesh: Mesh) -> Any:
+    """device_put a pytree onto ``mesh`` following a PartitionSpec tree
+    (the host->mesh hand-off for serve: params and cache move once, the
+    jitted step then keeps them resident in their shards)."""
+    return jax.tree_util.tree_map(
+        lambda s, x: jax.device_put(x, NamedSharding(mesh, s)),
+        spec_tree, tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
 def named_sharding_tree(specs: Any, mesh: Mesh) -> Any:
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, filter_spec_for_mesh(s, mesh)), specs,

@@ -53,6 +53,7 @@ def _popcount_reference(q, k, v, scale, delta, causal):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @settings(max_examples=24, deadline=None)
 @given(st.sampled_from([16, 32, 48, 64, 100, 128]),   # L (incl. non-div)
        st.sampled_from([16, 32, 48, 64]),             # d_head (pack pads)
@@ -186,6 +187,7 @@ def test_spikingformer_logits_bit_identical_across_binary_modes(mode):
     np.testing.assert_array_equal(np.asarray(ref_logits), np.asarray(got))
 
 
+@pytest.mark.slow
 def test_spikingformer_grads_match_across_binary_modes():
     """The kernel paths carry a surrogate-gradient custom VJP
     (kernels/ops.py recompute): d loss / d params agrees with the pure

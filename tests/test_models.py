@@ -89,6 +89,7 @@ _MCFG = ModelConfig(
     remat=False, moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=16))
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(st.integers(4, 64), st.integers(1, 4))
 def test_router_topk_invariants(t, k):

@@ -23,6 +23,7 @@ def _inputs(seed, b, s, h, n, w_lo, w_hi):
     return r, k, v, w, u
 
 
+@pytest.mark.slow
 @settings(max_examples=12, deadline=None)
 @given(st.integers(0, 100), st.sampled_from([8, 16, 32]),
        st.integers(17, 80))
