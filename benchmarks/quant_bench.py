@@ -1,0 +1,197 @@
+"""Quantized-weight datapath sweep: dtype x shape x sparsity.
+
+Three measurements of the ``repro.quant`` subsystem (DESIGN.md §8):
+
+  * ``rows`` — wall clock of the sparse-engine spike matmul per weight
+    dtype (fp32 reference kernel vs int8 vs int4-unpacked codes) over
+    (M, K, N) x coherent tile sparsity. On CPU the kernels run in Pallas
+    *interpret* mode, so wall-clock ratios measure the lowered-lax
+    emulation — the transferable numbers are the footprint and the
+    skip fraction (dtype-independent: occupancy skips fire identically
+    on integer weights);
+  * ``footprint`` — measured weight-footprint compression on the
+    **full** ``spikingformer-lm`` config materialized in fp32 (the
+    serving reference dtype): int8 ≈ 4K/(K+4) ≈ 3.94x at K=256, int4
+    (packed nibbles) ≈ 8K/(K+8) ≈ 7.75x — the dual-side compression
+    claim, measured not modeled;
+  * ``calibration`` — whole-model PTQ logit deltas on the spikingformer
+    smoke configs (clip-ratio grid, chosen point) — the accuracy side of
+    the trade.
+
+Output: ``artifacts/quant_bench.json``; also wired into
+``benchmarks/run.py`` (CI smoke emits it on every run).
+
+Usage: PYTHONPATH=src python benchmarks/quant_bench.py [--fast|--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from dual_engine_bench import coherent_spikes
+
+SHAPES = [(256, 128, 256), (512, 256, 256), (1024, 256, 512)]  # (M, K, N)
+SPARSITIES = [0.5, 0.75, 0.9]
+BLOCK = 64
+REPS = 5
+DTYPES = ("fp32", "int8", "int4")
+
+
+def _time(fn, *args) -> float:
+    fn(*args).block_until_ready()
+    ts = []
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        fn(*args).block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2] * 1e6
+
+
+def kernel_rows(fast: bool = False):
+    from repro.core import engine as E
+    from repro.kernels.spike_matmul import block_occupancy
+    from repro.quant import quantize_weight
+
+    shapes = SHAPES[:2] if fast else SHAPES
+    sparsities = SPARSITIES[1:] if fast else SPARSITIES
+    eng = E.EngineConfig(mode="sparse", block_m=BLOCK, block_n=BLOCK,
+                         block_k=BLOCK)
+    rows = []
+    for m, k, n in shapes:
+        key = jax.random.PRNGKey(m + k + n)
+        kw, ks = jax.random.split(key)
+        w = jax.random.normal(kw, (k, n), jnp.float32) / (k ** 0.5)
+        trees = {"fp32": {"w": w},
+                 "int8": quantize_weight(w, "int8"),
+                 "int4": quantize_weight(w, "int4")}
+        for sparsity in sparsities:
+            s = coherent_spikes(ks, m, k, BLOCK, sparsity)
+            occ = block_occupancy(s, min(BLOCK, m), min(BLOCK, k))
+            skip = float(1.0 - occ.mean())
+            us = {}
+            for dt in DTYPES:
+                p = trees[dt]
+                us[dt] = _time(jax.jit(
+                    lambda s, p=p: E.spike_linear(p, s, engine=eng)), s)
+            rows.append({
+                "bench": "quant_linear", "shape": [m, k, n],
+                "block": BLOCK, "sparsity": sparsity,
+                "skip_fraction": round(skip, 4),
+                "fp32_us": round(us["fp32"], 1),
+                "int8_us": round(us["int8"], 1),
+                "int4_us": round(us["int4"], 1),
+                "int8_vs_fp32": round(us["fp32"] / us["int8"], 3),
+                "int4_vs_fp32": round(us["fp32"] / us["int4"], 3),
+            })
+    return rows
+
+
+def footprint_sweep():
+    """Measured weight footprint of the full spikingformer-lm config,
+    materialized in fp32 (the serving reference) and quantized."""
+    from repro.configs import get_config
+    from repro.models import registry
+    from repro.quant import footprint_report, quantize_tree
+
+    cfg = get_config("spikingformer-lm", smoke=False).replace(
+        dtype="float32", remat=False)
+    params = registry.init(cfg, jax.random.PRNGKey(0))
+    out = {"config": cfg.name,
+           "n_params": int(sum(l.size for l in
+                               jax.tree_util.tree_leaves(params)))}
+    for dt in ("int8", "int4"):
+        rep = footprint_report(params, quantize_tree(params, dt))
+        out[dt] = rep
+    return out
+
+
+def calibration_sweep(fast: bool = False):
+    """Whole-model PTQ logit deltas on the spikingformer smoke configs."""
+    from repro.configs import get_config
+    from repro.models import registry
+    from repro.quant import calibrate
+
+    out = {}
+    # token-domain spiking LM
+    cfg = get_config("spikingformer-lm", smoke=True)
+    params = registry.init(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 16),
+                                          0, cfg.vocab_size)}
+    for dt in ("int8",) if fast else ("int8", "int4"):
+        _, rep = calibrate(cfg, params, batch, dt)
+        out[f"{cfg.name}/{dt}"] = rep
+    # vision spikingformer: init scaled up so the LIF neurons fire (at
+    # unit init the smoke net is silent and the comparison is vacuous)
+    cfg_v = get_config("spikingformer-4-256", smoke=True)
+    params_v = registry.init(cfg_v, jax.random.PRNGKey(0))
+    params_v = jax.tree_util.tree_map(
+        lambda a: a * 3.0 if a.ndim >= 2 else a, params_v)
+    state_v = registry.init_state(cfg_v)
+    batch_v = {"images": 2.0 * jax.random.normal(jax.random.PRNGKey(2),
+                                                 (4, 16, 16, 3)),
+               "labels": jnp.zeros((4,), jnp.int32)}
+    for dt in ("int8",) if fast else ("int8", "int4"):
+        _, rep = calibrate(cfg_v, params_v, batch_v, dt, state=state_v)
+        out[f"{cfg_v.name}/{dt}"] = rep
+    return out
+
+
+def bench(fast: bool = False):
+    rows = kernel_rows(fast=fast)
+    fp = footprint_sweep()
+    cal = calibration_sweep(fast=fast)
+    med = lambda xs: sorted(xs)[len(xs) // 2]
+    derived = {
+        "backend": jax.default_backend(),
+        "interpret_mode": jax.default_backend() != "tpu",
+        "points": len(rows),
+        # the acceptance numbers: measured weight-footprint compression
+        # on spikingformer-lm (quantized linears vs the same linears fp32)
+        "int8_compression": round(fp["int8"]["compression"], 3),
+        "int4_compression": round(fp["int4"]["compression"], 3),
+        "int8_total_compression": round(fp["int8"]["total_compression"], 3),
+        "int4_total_compression": round(fp["int4"]["total_compression"], 3),
+        "int8_logit_mae_rel": {k.split("/")[0]: round(
+            v["chosen"]["logit_mae_rel"], 4)
+            for k, v in cal.items() if k.endswith("int8")},
+        "int8_vs_fp32_us_median": med([r["int8_vs_fp32"] for r in rows]),
+        "mean_skip_at_0.9": round(sum(
+            r["skip_fraction"] for r in rows if r["sparsity"] == 0.9) /
+            max(1, sum(1 for r in rows if r["sparsity"] == 0.9)), 4),
+    }
+    return rows, {"footprint": fp, "calibration": cal, "derived": derived}
+
+
+def to_blob(rows, extras):
+    return {"rows": rows, **extras}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--smoke", action="store_true", help="alias of --fast")
+    ap.add_argument("--out", default="artifacts/quant_bench.json")
+    args = ap.parse_args()
+    rows, extras = bench(fast=args.fast or args.smoke)
+    blob = to_blob(rows, extras)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(blob, f, indent=1)
+    print("shape,sparsity,skip_fraction,fp32_us,int8_us,int4_us")
+    for r in rows:
+        print(f"{'x'.join(map(str, r['shape']))},{r['sparsity']},"
+              f"{r['skip_fraction']},{r['fp32_us']},{r['int8_us']},"
+              f"{r['int4_us']}")
+    print(json.dumps(extras["derived"]))
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,14 @@ def main() -> None:
 
     import dual_engine_bench
     import paper_figures as pf
+    import quant_bench
+
+    quant_extras = []
+
+    def quant_fn():
+        rows, extras = quant_bench.bench(fast=args.fast)
+        quant_extras.append((rows, extras))
+        return rows, extras["derived"]
 
     benches = [
         ("fig12_decoder", pf.fig12_decoder),
@@ -40,6 +48,7 @@ def main() -> None:
         ("fig5_pipeline", pf.fig5_pipeline),
         ("kernels", pf.kernels_bench),
         ("dual_engine", lambda: dual_engine_bench.bench(fast=args.fast)),
+        ("quant", quant_fn),
     ]
     if not args.fast:
         benches.insert(0, ("fig11_sparsity", pf.fig11_sparsity))
@@ -61,6 +70,11 @@ def main() -> None:
     with open("artifacts/dual_engine_bench.json", "w") as f:
         json.dump(dual_engine_bench.to_blob(de["rows"], de["derived"]),
                   f, indent=1)
+    # standalone quantization artifact (kernel sweep + measured footprint
+    # + PTQ calibration): same layout quant_bench.py --out writes
+    q_rows, q_extras = quant_extras[0]
+    with open("artifacts/quant_bench.json", "w") as f:
+        json.dump(quant_bench.to_blob(q_rows, q_extras), f, indent=1)
 
     print("\n== row dumps ==")
     for name, blob in all_rows.items():

@@ -3,8 +3,9 @@ with binary attention + LIF dynamics on synthetic images, then run
 inference and report spike sparsity — the quantity FireFly-T's sparse
 engine exploits.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--steps N]
 """
+import argparse
 import sys
 
 sys.path.insert(0, "src")
@@ -21,6 +22,10 @@ from repro.optim import adamw, warmup_cosine
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60,
+                    help="training steps (tests run a short smoke)")
+    args = ap.parse_args()
     cfg = get_config("spikingformer-4-256", smoke=True)
     print(f"model: {cfg.name} (smoke) — {cfg.num_layers} blocks, "
           f"d={cfg.d_model}, T_s={cfg.spiking.time_steps}, "
@@ -36,11 +41,11 @@ def main():
     step_fn = jax.jit(build_train_step(cfg, opt))
 
     step = jnp.asarray(0)
-    for i in range(60):
+    for i in range(args.steps):
         batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
         params, opt_state, step, metrics, state = step_fn(
             params, opt_state, step, batch, state)
-        if i % 10 == 0 or i == 59:
+        if i % 10 == 0 or i == args.steps - 1:
             print(f"step {i:3d}  loss {float(metrics['loss']):.4f}  "
                   f"fire-rate {float(metrics['fire_rate']):.3f}")
 

@@ -7,6 +7,7 @@ Subpackages:
   sim       — cycle-level hardware model reproducing the paper's experiments
   data      — synthetic data pipelines
   optim     — optimizers, schedules, gradient compression
+  quant     — int8/int4 weight quantization: PTQ, calibration, QAT (STE)
   checkpoint— sharded async checkpointing + elastic restore
   runtime   — fault tolerance, straggler mitigation
   parallel  — sharding rules

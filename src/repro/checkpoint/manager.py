@@ -1,8 +1,21 @@
 """Sharded, async checkpointing with elastic restore.
 
 Format: one directory per step containing
-  manifest.json  — treedef (path-keyed), shapes, dtypes, step metadata
-  <leaf-id>.npy  — one file per leaf (float leaves saved in their dtype)
+  manifest.json  — treedef (path-keyed), shapes, dtypes, container kinds,
+                   step metadata
+  <leaf-id>.npy  — one file per leaf (every leaf saved in its dtype —
+                   float, int8 weight codes, packed-int4 uint8 nibbles,
+                   packed-KV uint32 words all round-trip bitwise)
+
+Quantized trees (repro.quant: {"qw": int8|uint8, "scale": fp32} linears)
+are first-class: the int payload is the on-disk payload (a quantized
+checkpoint really is ~4x/~8x smaller — see ``dir_nbytes``), scales ride
+the same manifest, and ``extra={"quant": ...}`` records the datapath so a
+serving loader can validate dtype expectations before restore. Restore
+works against a template pytree *or* template-free (``template=None``):
+the manifest's per-leaf container kinds rebuild the nested dict/list
+structure — which is how a server loads a quantized tree whose structure
+(qw/scale vs w) differs from anything ``registry.init`` produces.
 
 Design points for 1000+ node scale (implemented here single-controller,
 interfaces multi-host ready):
@@ -51,6 +64,60 @@ def _flatten_with_paths(tree) -> Dict[str, Any]:
     return flat
 
 
+def _container_kinds(tree) -> Dict[str, str]:
+    """Internal-node kinds by path ('' = root): every container is
+    recorded — including empty ones, which have no leaf to imply them —
+    so the tree rebuilds with no template."""
+    kinds: Dict[str, str] = {}
+
+    def walk(path, node):
+        key = "/".join(path)
+        if isinstance(node, dict):
+            kinds[key] = "dict"
+            for k, v in node.items():
+                walk(path + (str(k),), v)
+        elif isinstance(node, (list, tuple)):
+            kinds[key] = "tuple" if isinstance(node, tuple) else "list"
+            for i, v in enumerate(node):
+                walk(path + (str(i),), v)
+    walk((), tree)
+    return kinds
+
+
+def _unflatten_from_manifest(flat: Dict[str, Any],
+                             kinds: Dict[str, str]):
+    """Template-free rebuild: seed every recorded container (so empty
+    lists/dicts survive the round trip), nest leaves by '/'-split paths,
+    then turn list/tuple nodes (children keyed '0'..'n-1') back into
+    sequences."""
+    root: Dict[str, Any] = {}
+
+    def ensure(parts):
+        node = root
+        for p in parts:
+            node = node.setdefault(p, {})
+        return node
+
+    for path in kinds:
+        if path:
+            ensure(path.split("/"))
+    for path, leaf in flat.items():
+        parts = path.split("/")
+        ensure(parts[:-1])[parts[-1]] = leaf
+
+    def rebuild(path: str, node):
+        if not isinstance(node, dict):
+            return node
+        built = {k: rebuild(f"{path}/{k}" if path else k, v)
+                 for k, v in node.items()}
+        kind = kinds.get(path)
+        if kind in ("list", "tuple"):
+            seq = [built[str(i)] for i in range(len(built))]
+            return tuple(seq) if kind == "tuple" else seq
+        return built
+    return rebuild("", root)
+
+
 def _unflatten(template, flat: Dict[str, Any]):
     def walk(path, node):
         if isinstance(node, dict):
@@ -70,7 +137,8 @@ def save_tree(tree, directory: str, step: int, extra: Optional[dict] = None):
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
     flat = _flatten_with_paths(tree)
-    manifest = {"step": step, "leaves": {}, "extra": extra or {}}
+    manifest = {"step": step, "leaves": {}, "extra": extra or {},
+                "containers": _container_kinds(tree)}
     for i, (path, leaf) in enumerate(sorted(flat.items())):
         arr = np.asarray(jax.device_get(leaf))
         fname = f"leaf{i:05d}.npy"
@@ -80,7 +148,8 @@ def save_tree(tree, directory: str, step: int, extra: Optional[dict] = None):
         np.save(os.path.join(tmp, fname), arr)
         manifest["leaves"][path] = {"file": fname,
                                     "shape": list(arr.shape),
-                                    "dtype": dtype_name}
+                                    "dtype": dtype_name,
+                                    "nbytes": int(arr.nbytes)}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(directory):
@@ -88,8 +157,10 @@ def save_tree(tree, directory: str, step: int, extra: Optional[dict] = None):
     os.replace(tmp, directory)
 
 
-def restore_tree(directory: str, template, shardings=None):
-    """Restore against a template pytree; ``shardings`` (same structure,
+def restore_tree(directory: str, template=None, shardings=None):
+    """Restore against a template pytree, or with ``template=None``
+    rebuild the structure from the manifest's container kinds (quantized
+    / legacy-structure checkpoints); ``shardings`` (same structure,
     jax.sharding.Sharding leaves) enables elastic re-mesh on load."""
     with open(os.path.join(directory, "manifest.json")) as f:
         manifest = json.load(f)
@@ -99,11 +170,28 @@ def restore_tree(directory: str, template, shardings=None):
         if info["dtype"] in _EXTENDED_DTYPES:
             arr = arr.view(_EXTENDED_DTYPES[info["dtype"]][0])
         flat[path] = arr
-    tree = _unflatten(template, flat)
+    if template is None:
+        if "containers" not in manifest:
+            raise ValueError(
+                f"checkpoint {directory} predates container-kind "
+                f"manifests: template-free restore cannot distinguish "
+                f"lists from dicts — pass a template pytree")
+        tree = _unflatten_from_manifest(flat, manifest["containers"])
+    else:
+        tree = _unflatten(template, flat)
     if shardings is not None:
         tree = jax.tree_util.tree_map(
             lambda leaf, s: jax.device_put(leaf, s), tree, shardings)
     return tree, manifest["step"], manifest.get("extra", {})
+
+
+def dir_nbytes(directory: str) -> int:
+    """On-disk payload bytes of a checkpoint (leaf files only — the
+    measured number behind the quantized-checkpoint compression report)."""
+    with open(os.path.join(directory, "manifest.json")) as f:
+        manifest = json.load(f)
+    return sum(os.path.getsize(os.path.join(directory, info["file"]))
+               for info in manifest["leaves"].values())
 
 
 class CheckpointManager:
@@ -153,7 +241,8 @@ class CheckpointManager:
             self._thread = threading.Thread(target=work, daemon=True)
             self._thread.start()
 
-    def restore(self, template, step: Optional[int] = None, shardings=None):
+    def restore(self, template=None, step: Optional[int] = None,
+                shardings=None):
         step = step if step is not None else self.latest_step()
         if step is None:
             return None

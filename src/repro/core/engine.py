@@ -79,6 +79,15 @@ class EngineConfig:
       AND-PopCount; layout is static per config, so this lives here and
       not in the ambient state.
 
+    weights: weight datapath dtype — 'fp32' (native params), 'int8', or
+      'int4'. This is the *declared* serving datapath (launch/serve.py
+      --quantize sets it and quantizes the params at load; repro.quant);
+      per-call dispatch is transparent on the param dict — a quantized
+      ``{"qw","scale"[,"b"]}`` dict routes through the int8-accumulating
+      kernel (sparse) or the int-exact fp32 reference (dense) whatever
+      this field says, so mixed trees (fp embeddings + int8 linears) just
+      work.
+
     interpret: force Pallas interpret mode (None = auto: off-TPU only).
     """
     mode: str = "auto"
@@ -90,7 +99,13 @@ class EngineConfig:
     attn_block_q: int = 128
     attn_block_k: int = 128
     packed_kv: bool = True
+    weights: str = "fp32"
     interpret: Optional[bool] = None
+
+    def __post_init__(self):
+        if self.weights not in ("fp32", "int8", "int4"):
+            raise ValueError(f"unknown weights datapath {self.weights!r} "
+                             f"(expected fp32|int8|int4)")
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
@@ -207,6 +222,50 @@ _sparse_matmul.defvjp(_sparse_fwd, _sparse_bwd)
 
 
 # ---------------------------------------------------------------------------
+# quantized sparse path: int8-accumulating Pallas kernel fwd, dequantized
+# dense transposes bwd (repro.quant weight datapath, DESIGN.md §8)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _quant_sparse_matmul(s2d, qw, scale, b, block_m, block_n, block_k,
+                         counts, interpret):
+    from repro.kernels.spike_matmul import quant_spike_matmul  # lazy
+    return quant_spike_matmul(s2d, qw, scale, bias=b, block_m=block_m,
+                              block_n=block_n, block_k=block_k,
+                              counts=counts, interpret=interpret)
+
+
+def _quant_sparse_fwd(s2d, qw, scale, b, block_m, block_n, block_k,
+                      counts, interpret):
+    out = _quant_sparse_matmul(s2d, qw, scale, b, block_m, block_n,
+                               block_k, counts, interpret)
+    return out, (s2d, qw, scale, b)
+
+
+def _quant_sparse_bwd(block_m, block_n, block_k, counts, interpret, res, g):
+    """ds flows through the *dequantized* weights (the fp32 function the
+    int kernel computes); int8 codes get a float0 cotangent (integer
+    leaves are non-differentiable); scale/bias get their true grads so a
+    forward under jax.grad never silently zeroes a float leaf."""
+    import numpy as np
+    s2d, qw, scale, b = res
+    g32 = g.astype(jnp.float32)
+    w_deq = qw.astype(jnp.float32) * scale[None, :]
+    ds = jnp.dot(g32, w_deq.T,
+                 preferred_element_type=jnp.float32).astype(s2d.dtype)
+    acc = jnp.dot(s2d.astype(jnp.float32), qw.astype(jnp.float32),
+                  preferred_element_type=jnp.float32)
+    dscale = (g32 * acc).sum(axis=0).astype(scale.dtype)
+    dqw = np.zeros(qw.shape, dtype=jax.dtypes.float0)
+    db = None if b is None else g32.sum(axis=0).astype(b.dtype)
+    return ds, dqw, dscale, db
+
+
+_quant_sparse_matmul.defvjp(_quant_sparse_fwd, _quant_sparse_bwd)
+
+
+# ---------------------------------------------------------------------------
 # public entry points
 # ---------------------------------------------------------------------------
 
@@ -225,25 +284,87 @@ def dense_spike_linear(p: Dict[str, Any], x: jax.Array) -> jax.Array:
     return y.astype(x.dtype)
 
 
+def _unpacked_qw(p: Dict[str, Any], k: int) -> jax.Array:
+    """int8 weight codes from a quantized param dict (int4 nibbles are
+    unpacked to int8 at dispatch; storage stays packed)."""
+    qw = p["qw"]
+    if qw.dtype == jnp.uint8:
+        from repro.quant.quantize import unpack_int4  # lazy: no cycle
+        qw = unpack_int4(qw, k)
+    return qw
+
+
+def dense_quant_linear(p: Dict[str, Any], x: jax.Array) -> jax.Array:
+    """The quantized dense reference: fp32-accumulated dot against the raw
+    int codes, per-output-channel scale + bias in the epilogue, cast back
+    to the activation dtype.
+
+    On {0,1} spike inputs every partial sum is a small integer held
+    exactly in fp32, so this equals the int32-accumulating kernel
+    bitwise; on analog inputs it is weight-only quantized compute (the
+    int codes dequantize on the fly through the epilogue scale).
+    """
+    k = x.shape[-1]
+    qw = _unpacked_qw(p, k)
+    acc = jnp.dot(x, qw.astype(x.dtype),
+                  preferred_element_type=jnp.float32)
+    y = acc * p["scale"].astype(jnp.float32)
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
 def spike_linear(p: Dict[str, Any], x: jax.Array, *,
-                 engine: Optional[EngineConfig] = None) -> jax.Array:
+                 engine: Optional[EngineConfig] = None,
+                 counts: bool = False) -> jax.Array:
     """Dual-engine linear layer for spike (or spike-derived sparse) inputs.
 
-    p: {'w': (K, N)[, 'b': (N,)]} param dict (models/nn.py layout);
+    p: {'w': (K, N)[, 'b': (N,)]} param dict (models/nn.py layout), or the
+    quantized layout {'qw', 'scale'[, 'b']} (repro.quant) — quantized
+    dicts route through the int8-accumulating kernel on the sparse path
+    and the int-exact fp32 reference on the dense path;
     x: (..., K) activations — {0,1} spikes or the sparse integer counts a
-    binary-attention context carries. Leading dims fold into the sparse
-    engine's M. ``engine=None`` uses the ambient engine (see use_engine);
-    no ambient engine means dense.
+    binary-attention context carries; the count call sites declare
+    ``counts=True`` so the quantized kernel gives the left operand int32
+    lanes (an int8 cast would wrap counts >= 128 — spikes stay int8, the
+    MXU fast path). Leading dims fold into the sparse engine's M.
+    ``engine=None`` uses the ambient engine (see use_engine); no ambient
+    engine means dense.
     """
     engine = engine if engine is not None else get_engine()
     k = x.shape[-1]
-    n = p["w"].shape[1]
+    quantized = "qw" in p
+    if engine is not None and engine.weights != "fp32":
+        # the declared datapath is a contract, not a comment: a config
+        # serving int8 must actually be handed int8 codes (catches a
+        # quantize-at-load step that missed a linear, or width mismatch).
+        # An int4 declaration accepts int8-dtyped codes too: the int4
+        # quantizer deliberately leaves odd-K linears as int8-stored
+        # 4-bit codes (quantize_weight), indistinguishable by dtype.
+        ok = quantized and (engine.weights == "int4"
+                            or p["qw"].dtype == jnp.int8)
+        if not ok:
+            actual = "fp32 (unquantized)" if not quantized \
+                else "packed int4"
+            raise ValueError(
+                f"engine declares weights={engine.weights!r} but this "
+                f"linear's params are {actual} (quantize_tree the params "
+                f"or fix EngineConfig.weights)")
+    n = (p["qw"] if quantized else p["w"]).shape[-1]
     m = 1
     for d in x.shape[:-1]:
         m *= d
     if resolve_mode(engine, m, k, n) == "dense":
-        return dense_spike_linear(p, x)
-    out = _sparse_matmul(x.reshape(-1, k), p["w"], p.get("b"),
-                         engine.block_m, engine.block_n, engine.block_k,
-                         engine.interpret)
+        return dense_quant_linear(p, x) if quantized \
+            else dense_spike_linear(p, x)
+    if quantized:
+        out = _quant_sparse_matmul(
+            x.reshape(-1, k).astype(jnp.float32), _unpacked_qw(p, k),
+            p["scale"].astype(jnp.float32), p.get("b"),
+            engine.block_m, engine.block_n, engine.block_k,
+            counts, engine.interpret)
+    else:
+        out = _sparse_matmul(x.reshape(-1, k), p["w"], p.get("b"),
+                             engine.block_m, engine.block_n, engine.block_k,
+                             engine.interpret)
     return out.reshape(*x.shape[:-1], n).astype(x.dtype)

@@ -30,6 +30,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.bitpack import pad_to_multiple
 
@@ -68,6 +69,52 @@ def _kernel_bias(occ_ref, s_ref, w_ref, b_ref, o_ref, *, nk):
     @pl.when(ki == nk - 1)
     def _bias():
         o_ref[...] += b_ref[...].astype(jnp.float32)
+
+
+def _qkernel(occ_ref, s_ref, w_ref, scale_ref, o_ref, acc_ref, *, nk):
+    """Quantized-weight body: spike {0,1} rows x int8 weight rows with an
+    **int32 accumulator** in VMEM scratch (the MXU's native int8 x int8 ->
+    int32 form, the TPU analogue of FireFly-T's int8 DSP datapath),
+    per-output-channel fp32 scale applied in the epilogue on the last K
+    step. The occupancy skip is unchanged: a dark spike block fetches no
+    weights and adds no MACs, whatever the weight dtype."""
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(occ_ref[0, 0] > 0)
+    def _compute():
+        acc_ref[...] += jax.lax.dot_general(
+            s_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+
+    @pl.when(ki == nk - 1)
+    def _epilogue():
+        o_ref[...] = acc_ref[...].astype(jnp.float32) * \
+            scale_ref[...].astype(jnp.float32)
+
+
+def _qkernel_bias(occ_ref, s_ref, w_ref, scale_ref, b_ref, o_ref, acc_ref,
+                  *, nk):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(occ_ref[0, 0] > 0)
+    def _compute():
+        acc_ref[...] += jax.lax.dot_general(
+            s_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+
+    @pl.when(ki == nk - 1)
+    def _epilogue():
+        o_ref[...] = acc_ref[...].astype(jnp.float32) * \
+            scale_ref[...].astype(jnp.float32) + \
+            b_ref[...].astype(jnp.float32)
 
 
 def block_occupancy(s: jax.Array, block_m: int, block_k: int) -> jax.Array:
@@ -130,6 +177,80 @@ def spike_matmul(s: jax.Array, w: jax.Array, *,
         interpret=interpret,
     )(*operands)
     return out[:m, :n].astype(w.dtype if out_dtype is None else out_dtype)
+
+
+def quant_spike_matmul(s: jax.Array, qw: jax.Array, scale: jax.Array, *,
+                       bias: Optional[jax.Array] = None,
+                       block_m: int = 128, block_n: int = 128,
+                       block_k: int = 128,
+                       occupancy: Optional[jax.Array] = None,
+                       counts: bool = False,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """y = (s @ qw) * scale (+ bias); s: (M, K) {0,1} spikes, qw: (K, N)
+    int8 weight codes, scale: (N,) fp32 per-output-channel -> (M, N) fp32.
+
+    The integer half of the dual-side compression: spikes enter the MXU as
+    int8 {0,1}, weights as int8 codes, partial sums accumulate in int32
+    VMEM scratch (exact — no fp rounding inside the reduction), and the
+    per-channel scale lands once in the epilogue. Under dyadic scales the
+    result is bitwise equal to the fp32 reference on dequantized weights
+    (DESIGN.md §8). Occupancy skip, padding, and tiling mirror
+    :func:`spike_matmul`.
+
+    ``counts=True`` declares the left operand as binary-attention integer
+    counts (values up to L, not {0,1}): it rides int32 lanes instead of
+    int8 — an int8 cast would silently wrap counts >= 128. The weight
+    side (the bandwidth that quantization buys back) stays int8 either
+    way.
+    """
+    m, k = s.shape
+    k2, n = qw.shape
+    assert k == k2, f"spikes K={k} vs weight K={k2}"
+    assert qw.dtype == jnp.int8, f"quant kernel wants int8 codes, got " \
+        f"{qw.dtype} (unpack int4 nibbles first)"
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    sp = pad_to_multiple(pad_to_multiple(s, 0, block_m), 1, block_k)
+    wp = pad_to_multiple(pad_to_multiple(qw, 0, block_k), 1, block_n)
+    mp, kp = sp.shape
+    np_ = wp.shape[1]
+    occ = block_occupancy(sp, block_m, block_k) if occupancy is None \
+        else occupancy
+    s_int = sp.astype(jnp.int32 if counts else jnp.int8)
+
+    grid = (mp // block_m, np_ // block_n, kp // block_k)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda mi, ni, ki: (mi, ki)),
+        pl.BlockSpec((block_m, block_k), lambda mi, ni, ki: (mi, ki)),
+        pl.BlockSpec((block_k, block_n), lambda mi, ni, ki: (ki, ni)),
+        pl.BlockSpec((1, block_n), lambda mi, ni, ki: (0, ni)),
+    ]
+    operands = [occ, s_int, wp,
+                pad_to_multiple(scale.reshape(1, n).astype(jnp.float32),
+                                1, block_n)]
+    if bias is None:
+        kernel = functools.partial(_qkernel, nk=grid[2])
+    else:
+        kernel = functools.partial(_qkernel_bias, nk=grid[2])
+        in_specs.append(pl.BlockSpec((1, block_n),
+                                     lambda mi, ni, ki: (0, ni)))
+        operands.append(pad_to_multiple(
+            bias.reshape(1, n).astype(jnp.float32), 1, block_n))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(*operands)
+    return out[:m, :n]
 
 
 def spike_matmul_batched(s: jax.Array, w: jax.Array, *,

@@ -24,7 +24,15 @@ units — mapped to the TPU serve path (DESIGN.md §Orchestrator):
   * spiking LMs (``--arch spikingformer-lm``) decode against a
     *bit-packed* spike KV cache (uint32 words, AND-PopCount scoring —
     the paper's 32x spike-RAM compression); the server reports the
-    measured cache footprint vs the unpacked layout.
+    measured cache footprint vs the unpacked layout;
+  * quantized weights: ``--quantize int8|int4`` quantizes the param tree
+    at load (repro.quant: symmetric per-output-channel scales, packed
+    nibbles for int4) — the other half of the paper's dual-side
+    compression. Every linear then serves integer codes (the decode
+    path's analog matmuls dequantize through the epilogue scale; spike
+    matmuls take the int8-accumulating kernel when the engine goes
+    sparse) and the server reports the measured weight footprint next to
+    the KV-cache report.
 """
 from __future__ import annotations
 
@@ -329,6 +337,10 @@ def main():
     ap.add_argument("--mesh", default="",
                     help="DATAxMODEL serving mesh, e.g. 2x2 (needs that "
                          "many devices; '' = unsharded)")
+    ap.add_argument("--quantize", default="none",
+                    choices=["none", "int8", "int4"],
+                    help="quantize linear weights at load (repro.quant); "
+                         "reports the measured footprint compression")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -340,6 +352,18 @@ def main():
         d, m = (int(x) for x in args.mesh.split("x"))
         mesh = make_serve_mesh(d, m)
     params = registry.init(cfg, jax.random.PRNGKey(0))
+    wrep = None
+    if args.quantize != "none":
+        from repro.core.engine import EngineConfig
+        from repro.quant import footprint_report, quantize_tree
+        qparams = quantize_tree(params, args.quantize)
+        wrep = footprint_report(params, qparams)
+        # declare the weight datapath on the engine (the per-call dispatch
+        # keys off the quantized param dicts; this records intent and lets
+        # 'auto' matmul routing stay in effect for the spike call sites)
+        eng = cfg.engine if cfg.engine is not None else EngineConfig()
+        cfg = cfg.replace(engine=eng.replace(weights=args.quantize))
+        params = qparams
     server = BatchedServer(cfg, params, args.slots, args.max_len,
                            chunk=args.chunk, mesh=mesh)
     rng = np.random.default_rng(0)
@@ -352,6 +376,11 @@ def main():
     print(f"[serve] kv cache {kv['kv_bytes']/1024:.1f} KiB "
           f"(packed={kv['packed']}, {kv['compression']:.0f}x vs unpacked)"
           + (f", mesh={args.mesh}" if mesh is not None else ""))
+    if wrep is not None:
+        print(f"[serve] weights {wrep['quant_weight_bytes']/1024:.1f} KiB "
+              f"({args.quantize}): {wrep['compression']:.2f}x vs "
+              f"{jnp.dtype(cfg.dtype).name} linears "
+              f"({wrep['total_compression']:.2f}x whole tree)")
     t0 = time.time()
     steps = server.run()
     dt = time.time() - t0

@@ -96,16 +96,28 @@ def loss_from_forward(cfg: ModelConfig, logits, batch) -> jax.Array:
 
 
 def build_train_step(cfg: ModelConfig, optimizer: Optimizer,
-                     compress: bool = False) -> Callable:
+                     compress: bool = False,
+                     qat: Optional[str] = None) -> Callable:
     """(params, opt_state, step, batch[, model_state]) ->
-    (params, opt_state, step+1, metrics[, model_state])."""
+    (params, opt_state, step+1, metrics[, model_state]).
+
+    ``qat``: 'int8' | 'int4' enables quantization-aware training — the
+    loss sees fake-quantized linears (repro.quant.qat, STE gradients to
+    the fp32 masters), so a post-training ``quantize_tree`` serves the
+    exact weights the loss optimized."""
     stateful = cfg.family in ("spikingformer", "cifarnet")
+    if qat is not None:
+        from repro.quant.qat import fake_quant_tree
+        fq = functools.partial(fake_quant_tree, dtype=qat)
+    else:
+        fq = lambda p: p
 
     if stateful:
         def train_step(params, opt_state, step, batch, model_state):
             def loss_fn(p):
                 with engine_scope(cfg):
-                    logits, aux = registry.forward(p, cfg, batch, train=True,
+                    logits, aux = registry.forward(fq(p), cfg, batch,
+                                                   train=True,
                                                    state=model_state)
                 return loss_from_forward(cfg, logits, batch), aux
             (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
@@ -120,7 +132,7 @@ def build_train_step(cfg: ModelConfig, optimizer: Optimizer,
     def train_step(params, opt_state, step, batch):
         def loss_fn(p):
             with engine_scope(cfg):
-                logits, aux = registry.forward(p, cfg, batch, train=True)
+                logits, aux = registry.forward(fq(p), cfg, batch, train=True)
             loss = loss_from_forward(cfg, logits, batch)
             if "moe_aux" in aux:
                 loss = loss + aux["moe_aux"]

@@ -72,13 +72,14 @@ def make_batch_fn(cfg, batch_size: int, seq_len: int):
 def train(arch: str, smoke: bool, total_steps: int, batch: int, seq: int,
           lr: float, ckpt_dir: Optional[str], ckpt_every: int,
           inject_failure_at: Optional[int], compress: bool,
-          log_every: int = 10, seed: int = 0):
+          log_every: int = 10, seed: int = 0, qat: Optional[str] = None):
     cfg = get_config(arch, smoke=smoke)
     stateful = cfg.family in ("spikingformer", "cifarnet")
     mesh = make_host_mesh()
     opt = adamw(warmup_cosine(lr, max(1, total_steps // 20), total_steps))
     batch_fn = make_batch_fn(cfg, batch, seq)
-    train_step = steps_lib.build_train_step(cfg, opt, compress=compress)
+    train_step = steps_lib.build_train_step(cfg, opt, compress=compress,
+                                            qat=qat)
     jitted = jax.jit(train_step, donate_argnums=(0, 1))
 
     params = registry.init(cfg, jax.random.PRNGKey(seed))
@@ -170,10 +171,14 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--inject-failure-at", type=int, default=None)
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--qat", default=None, choices=["int8", "int4"],
+                    help="quantization-aware training: the loss sees "
+                         "fake-quantized linears (STE grads to fp32 "
+                         "masters; repro.quant.qat)")
     args = ap.parse_args()
     train(args.arch, args.smoke, args.steps, args.batch, args.seq, args.lr,
           args.ckpt_dir, args.ckpt_every, args.inject_failure_at,
-          args.compress_grads)
+          args.compress_grads, qat=args.qat)
 
 
 if __name__ == "__main__":

@@ -37,12 +37,22 @@ def linear_init(key, d_in: int, d_out: int, *, bias: bool = False,
     return p
 
 
-def linear(p, x, *, spikes: bool = False):
-    # ``spikes=True`` marks the input as a {0,1} spike tensor (or the
-    # sparse integer counts binary attention emits): those call sites
-    # route through the dual-engine dispatch (core/engine.py), which may
-    # run the occupancy-skipping sparse kernel when an engine is
-    # installed. With no ambient engine this is the plain dense path.
+def linear(p, x, *, spikes: bool = False, counts: bool = False):
+    # ``spikes=True`` marks the input as a {0,1} spike tensor (or, with
+    # ``counts=True``, the sparse integer counts binary attention emits):
+    # those call sites route through the dual-engine dispatch
+    # (core/engine.py), which may run the occupancy-skipping sparse
+    # kernel when an engine is installed. With no ambient engine this is
+    # the plain dense path. Quantized param dicts ({'qw','scale'[,'b']},
+    # repro.quant) dispatch transparently: spike inputs take the
+    # int8-accumulating engine path (counts ride int32 lanes — int8
+    # would wrap at 128), analog inputs the weight-only dequantizing
+    # reference.
+    if "qw" in p:
+        from repro.core import engine as _engine  # lazy: no import cycle
+        if spikes and _engine.get_engine() is not None:
+            return _engine.spike_linear(p, x, counts=counts)
+        return _engine.dense_quant_linear(p, x)
     if spikes:
         from repro.core import engine as _engine  # lazy: no import cycle
         if _engine.get_engine() is not None:

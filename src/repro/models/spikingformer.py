@@ -188,7 +188,9 @@ def _ssa(p, st, cfg: ModelConfig, x, train: bool):
     # ctx is binarized-attention output: sparse integer counts, not {0,1}
     # spikes — but zero blocks are zero blocks, so the sparse engine skips
     # them all the same (every spiking matmul is sparsity-aware).
-    out = nn.linear(p["wo"], ctx, spikes=True)
+    # counts=True: under quantized weights the counts (up to L) must ride
+    # int32 lanes in the kernel, not the spikes' int8 fast path.
+    out = nn.linear(p["wo"], ctx, spikes=True, counts=True)
     out, bn_st = nn.batchnorm(p["bn_o"], st["bn_o"],
                               out.reshape(-1, d), train=train)
     new_st["bn_o"] = bn_st

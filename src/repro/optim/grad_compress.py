@@ -7,6 +7,11 @@ added back the next step (error feedback keeps the method unbiased in the
 long run — Karimireddy et al. 2019). Under GSPMD we express this as a
 value transform around the gradient: XLA then all-reduces the int8 view.
 8x less DP traffic at <0.1% loss delta on the synthetic tasks (tests).
+
+The quantizer itself is ``repro.quant.quantize`` — one symmetric int8
+core shared with the weight datapath (per-tensor scale here, per-output-
+channel there; same round/clip semantics). Only the error-feedback loop
+is gradient-specific.
 """
 from __future__ import annotations
 
@@ -15,18 +20,21 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.quant.quantize import (dequantize_values, quantize_values,
+                                  symmetric_scale)
+
 
 def int8_compress(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """-> (int8 values, fp32 scale). Symmetric per-tensor quantization."""
+    """-> (int8 values, fp32 scale). Symmetric per-tensor quantization
+    (scale = max|x| / 127 with an epsilon floor, round-to-nearest)."""
     x32 = x.astype(jnp.float32)
-    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
-    return q, scale
+    scale = symmetric_scale(x32, 8)
+    return quantize_values(x32, scale, 8), scale
 
 
 def int8_decompress(q: jax.Array, scale: jax.Array,
                     dtype=jnp.float32) -> jax.Array:
-    return (q.astype(jnp.float32) * scale).astype(dtype)
+    return dequantize_values(q, scale, dtype)
 
 
 def compress_state_init(params) -> Any:

@@ -32,6 +32,16 @@ _DENSE = [
     (r"(self_attn|cross_attn|attn)/(wq|wk|wv)/(w|b)", P(FSDP, TP)),
     (r"(self_attn|cross_attn|attn)/wo/w", P(TP, FSDP)),
     (r"pos_embed", P(None, FSDP)),
+    # quantized linears (repro.quant): int8/packed-int4 codes shard like
+    # their fp weights (int4 halves the K rows — non-dividing K falls
+    # back per-dimension); per-output-channel scales shard with N
+    (r"(wq|wk|wv)/qw", P(FSDP, TP)),
+    (r"wo/qw", P(TP, FSDP)),
+    (r"mlp/(up|gate)/qw", P(FSDP, TP)),
+    (r"mlp/down/qw", P(TP, FSDP)),
+    (r"lm_head/qw", P(FSDP, TP)),
+    (r"(wq|wk|wv|up|gate|lm_head)/scale", P(TP)),
+    (r"(wo|down)/scale", P(FSDP)),
 ]
 
 _MOE = [
@@ -100,7 +110,9 @@ def rules_for(cfg: ModelConfig, mesh: Optional[Mesh] = None,
     model_size = mesh.shape.get(TP, 1) if mesh is not None else 16
     if cfg.family in ("dense", "moe", "vlm", "hybrid") and \
             cfg.num_kv_heads % model_size != 0:
-        rules = [(r"(wk|wv)/(w|b)", P(FSDP, None))] + rules
+        rules = [(r"(wk|wv)/(w|b)", P(FSDP, None)),
+                 (r"(wk|wv)/qw", P(FSDP, None)),
+                 (r"(wk|wv)/scale", P())] + rules
     if scheme == "zero1":
         def strip_fsdp(spec: P) -> P:
             parts = []

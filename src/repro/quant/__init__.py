@@ -1,0 +1,7 @@
+from .calibrate import calibrate, logit_delta
+from .qat import fake_quant, fake_quant_tree
+from .quantize import (dequantize_tree, dequantize_values,
+                       dequantize_weight, footprint_report, is_quantized,
+                       pack_int4, quantize_tree, quantize_values,
+                       quantize_weight, symmetric_scale, tree_nbytes,
+                       unpack_int4, weight_bits)

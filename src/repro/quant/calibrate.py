@@ -1,0 +1,70 @@
+"""Post-training-quantization range calibration over a batch.
+
+Symmetric per-output-channel quantization has one free knob per layer: the
+clip point. ``amax`` clipping (clip_ratio = 1.0) spends int8 codes on the
+single largest weight in a channel; tighter clips trade a little clipping
+error on outliers for finer resolution everywhere else. For the *analog*
+(non-spike) layers of a spiking LM — the Q/K/V/O projections and MLP
+matmuls whose inputs are membrane currents, plus the LM head — the right
+clip depends on how weight error propagates through LIF thresholds and
+binary attention, which no weight-space metric sees. So we calibrate the
+whole model at once: sweep a small clip-ratio grid, run the quantized
+forward on a calibration batch, and keep the ratio whose logits sit
+closest to the fp32 reference (mean |Δ|). One global ratio, measured
+end to end — the grid is tiny because per-channel scales already absorb
+inter-channel spread.
+
+``calibrate`` returns the winning quantized tree plus a report
+(per-candidate logit MAE, the fp32 reference scale) the benchmarks emit
+into ``artifacts/quant_bench.json``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from .quantize import quantize_tree
+
+DEFAULT_RATIOS = (1.0, 0.95, 0.9, 0.8)
+
+
+def logit_delta(ref: Any, out: Any) -> Dict[str, float]:
+    """Calibration distance between two logit tensors: mean |Δ| plus the
+    normalized form (mae / std(ref)) that is comparable across configs."""
+    ref32 = jnp.asarray(ref, jnp.float32)
+    out32 = jnp.asarray(out, jnp.float32)
+    mae = float(jnp.abs(out32 - ref32).mean())
+    std = float(ref32.std())
+    return {"logit_mae": mae,
+            "logit_mae_rel": mae / max(std, 1e-12),
+            "ref_std": std,
+            "argmax_agree": float(
+                (out32.argmax(-1) == ref32.argmax(-1)).mean())}
+
+
+def calibrate(cfg, params, batch, dtype: str = "int8", *,
+              ratios: Sequence[float] = DEFAULT_RATIOS,
+              state=None) -> Tuple[Any, Dict[str, Any]]:
+    """PTQ calibration of a model's linears over one batch.
+
+    Runs the fp32 reference forward once, then one quantized forward per
+    clip-ratio candidate, and returns ``(best quantized tree, report)``.
+    ``state`` threads BatchNorm running stats for the stateful families
+    (spikingformer / cifarnet).
+    """
+    from repro.models import registry  # lazy: quant stays model-agnostic
+
+    kw = {} if state is None else {"state": state}
+    ref, _ = registry.forward(params, cfg, batch, train=False, **kw)
+    best = None
+    candidates = []
+    for r in ratios:
+        qtree = quantize_tree(params, dtype, clip_ratio=r)
+        out, _ = registry.forward(qtree, cfg, batch, train=False, **kw)
+        d = logit_delta(ref, out)
+        candidates.append({"clip_ratio": r, **d})
+        if best is None or d["logit_mae"] < best[1]["logit_mae"]:
+            best = (qtree, {"clip_ratio": r, **d})
+    report = {"dtype": dtype, "chosen": best[1], "candidates": candidates}
+    return best[0], report

@@ -1,0 +1,62 @@
+"""Quantization-aware training: fake-quant with a straight-through VJP.
+
+The serving datapath rounds weights to int8/int4 codes; QAT makes the
+training loss see that rounding so the master weights settle where the
+quantized model is accurate. ``fake_quant`` runs the *identical*
+quantize→dequantize as ``repro.quant.quantize`` (same per-output-channel
+symmetric scales, same round-to-nearest), entirely in fp32, and its VJP
+is the straight-through estimator: ``round`` has zero gradient almost
+everywhere, so the cotangent passes through unchanged and the optimizer
+keeps moving the fp32 masters. Because the scale itself is max-derived
+(no clipping at clip_ratio 1.0), no gradient masking is needed — every
+weight stays inside the representable range by construction.
+
+Plug into training via ``build_train_step(cfg, opt, qat='int8')``
+(launch/steps.py) or ``launch/train.py --qat int8|int4``: the loss
+closure fake-quantizes the param tree before the forward, grads flow to
+the fp32 masters, and a post-training ``quantize_tree`` of the masters
+produces exactly the weights the loss was trained against (same
+quantizer ⇒ zero train/serve mismatch).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .quantize import (INT_BITS, _is_linear_params, dequantize_values,
+                       map_param_dicts, quantize_values, symmetric_scale)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant(w: jax.Array, bits: int) -> jax.Array:
+    """Per-output-channel symmetric quantize→dequantize in fp32 (the
+    serving rounding made visible to the loss); identity VJP (STE)."""
+    scale = symmetric_scale(w, bits, axis=-2)
+    q = quantize_values(w, scale[..., None, :], bits)
+    return dequantize_values(q, scale[..., None, :], w.dtype)
+
+
+def _fake_quant_fwd(w, bits):
+    return fake_quant(w, bits), None
+
+
+def _fake_quant_bwd(bits, _res, g):
+    return (g,)                                    # straight-through
+
+
+fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
+
+
+def fake_quant_tree(params: Any, dtype: str = "int8") -> Any:
+    """Fake-quantize every eligible linear weight in a param tree (same
+    eligibility as ``quantize_tree``: 2-D / scan-stacked 3-D "w" dicts;
+    biases, norms, convs, embeddings untouched). Differentiable — grads
+    reach the fp32 masters through the STE."""
+    bits = INT_BITS[dtype]
+    return map_param_dicts(
+        params, _is_linear_params,
+        lambda path, node: {k: (fake_quant(v, bits) if k == "w" else v)
+                            for k, v in node.items()})
