@@ -22,6 +22,20 @@ tiles fire at 25% density. That is the regime where whole-tile skips
 pay; i.i.d. Bernoulli sparsity at the same rate almost never yields an
 empty 128x128 tile and is reported by the bench as skip_fraction ~ 0.
 
+Sparse datapaths (``sparse_path_rows``): tile vs decoded
+(``EngineConfig.sparse``, DESIGN.md §9) on *fine-grained / ragged*
+spike patterns — the regime where whole-tile skips never fire
+(``skip_fraction ~ 0``) but per-row occupancy is low, so the
+gather-compacted kernel's pow2 bucket schedule still cuts MACs. Each
+row records both paths' wall time, the tile skip fraction, the decoded
+schedule's MAC fraction (executed / total c_block-steps, scaled by the
+compacted width), and the cross-validation of
+``sim/balance_sim.predicted_schedule`` (Binomial occupancies from the
+generator's density model) against the measured tensor schedule
+(``kernels/spike_decode.build_schedule``) — ``sched_agreement`` is
+predicted/measured executed steps. ``auto_choice`` is what
+``sparse='auto'`` would pick from the concrete histogram.
+
 Binary engine (``attention_rows``): the three SSA execution targets of
 ``core.engine.resolve_binary_mode`` — pure jnp, the fused MXU Pallas
 kernel, the bit-packed popcount port — swept over L x d_head x causal on
@@ -78,6 +92,38 @@ def coherent_spikes(key, m, k, block, sparsity, density=0.25):
     return (tile_mask & fire).astype(jnp.float32)
 
 
+def ragged_spikes(key, m, k, lo, hi):
+    """{0,1} (M, K) with per-row i.i.d. firing at a log-uniform density
+    in [lo, hi] — ragged occupancy, no tile coherence (the FireFly-S
+    fine-grained regime the tile skip can't touch). Returns (spikes,
+    per-row densities) so the bench can feed the density model to
+    ``sim/balance_sim.predicted_schedule``."""
+    k1, k2 = jax.random.split(key)
+    logd = jax.random.uniform(k1, (m,), minval=jnp.log(lo),
+                              maxval=jnp.log(hi))
+    dens = jnp.exp(logd)
+    s = (jax.random.uniform(k2, (m, k)) < dens[:, None])
+    return s.astype(jnp.float32), dens
+
+
+def fine_spikes(key, m, k, density):
+    """{0,1} (M, K) i.i.d. Bernoulli — uniform fine-grained firing."""
+    s = (jax.random.uniform(key, (m, k)) < density).astype(jnp.float32)
+    return s, jnp.full((m,), density)
+
+
+# sparse-datapath sweep: (pattern name, generator kwargs); two ragged
+# patterns plus the uniform fine-grained point, all tile-incoherent
+SPARSE_PATTERNS = [
+    ("fine_iid", lambda key, m, k: fine_spikes(key, m, k, 0.10)),
+    ("ragged_mild", lambda key, m, k: ragged_spikes(key, m, k, 0.02, 0.3)),
+    ("ragged_extreme", lambda key, m, k: ragged_spikes(key, m, k,
+                                                       0.005, 0.6)),
+]
+SPARSE_PATH_SHAPES = [(512, 256, 256), (1024, 256, 512)]
+SPARSE_PATH_BLOCK = 64  # block_m/block_n; block_k doubles as c_block
+
+
 def _time(fn, *args) -> float:
     fn(*args).block_until_ready()           # compile + warm
     ts = []
@@ -124,6 +170,71 @@ def attention_bench(fast: bool = False):
     return rows
 
 
+def sparse_path_bench(fast: bool = False):
+    """Tile vs decoded datapath on fine-grained / ragged spike patterns,
+    plus the sim-vs-measured bucket-schedule cross-validation."""
+    import numpy as np
+
+    from repro.core import engine as E
+    from repro.kernels.spike_decode import build_schedule, choose_sparse_path
+    from repro.kernels.spike_matmul import block_occupancy
+    from repro.sim.balance_sim import predicted_schedule
+
+    shapes = SPARSE_PATH_SHAPES[:1] if fast else SPARSE_PATH_SHAPES
+    block = SPARSE_PATH_BLOCK
+    rows = []
+    for m, k, n in shapes:
+        for pat_name, gen in SPARSE_PATTERNS:
+            # deterministic across processes (str hash() is salted)
+            key = jax.random.PRNGKey(m + k + n + sum(map(ord, pat_name)))
+            kw, ks = jax.random.split(key)
+            s, dens = gen(ks, m, k)
+            w = jax.random.normal(kw, (k, n), jnp.float32)
+            p = {"w": w}
+            tile_eng = E.EngineConfig(mode="sparse", sparse="tile",
+                                      block_m=block, block_n=block,
+                                      block_k=block)
+            dec_eng = tile_eng.replace(sparse="decoded")
+            dense_us = _time(jax.jit(
+                lambda s, p=p: E.spike_linear(p, s, engine=E.DENSE)), s)
+            tile_us = _time(jax.jit(
+                lambda s, p=p, e=tile_eng: E.spike_linear(p, s,
+                                                          engine=e)), s)
+            dec_us = _time(jax.jit(
+                lambda s, p=p, e=dec_eng: E.spike_linear(p, s,
+                                                         engine=e)), s)
+            occ_tiles = block_occupancy(s, block, block)
+            tile_skip = float(1.0 - occ_tiles.mean())
+            occ_rows = (s != 0).sum(-1).astype(jnp.int32)
+            meas = build_schedule(occ_rows, block, block, cap=k)
+            dec_frac = float(meas["mac_fraction"]) * \
+                meas["padded_cap"] / k
+            pred = predicted_schedule(m, k, np.asarray(dens), block,
+                                      block, np.random.default_rng(0))
+            rows.append({
+                "bench": "sparse_path", "pattern": pat_name,
+                "shape": [m, k, n], "block": block,
+                "measured_sparsity": float(1.0 - s.mean()),
+                "dense_us": round(dense_us, 1),
+                "tile_us": round(tile_us, 1),
+                "decoded_us": round(dec_us, 1),
+                "tile_skip_fraction": round(tile_skip, 4),
+                "tile_modeled_speedup": round(
+                    1.0 / max(1e-9, 1.0 - tile_skip), 3),
+                "decoded_mac_fraction": round(dec_frac, 4),
+                "decoded_mac_reduction": round(1.0 - dec_frac, 4),
+                "decoded_modeled_speedup": round(
+                    1.0 / max(1e-9, dec_frac), 3),
+                "sched_measured_steps": int(meas["executed"]),
+                "sched_predicted_steps": int(pred["executed"]),
+                "sched_agreement": round(
+                    int(pred["executed"]) / max(1, int(meas["executed"])),
+                    3),
+                "auto_choice": choose_sparse_path(s, block, block),
+            })
+    return rows
+
+
 def bench(fast: bool = False):
     from repro.core import engine as E
     from repro.core.dual_engine import (measured_overlap_efficiency,
@@ -163,6 +274,7 @@ def bench(fast: bool = False):
                         min(1.0 / max(1e-9, 1.0 - skip), float(tiles)), 3),
                 })
     attn_rows = attention_bench(fast=fast)
+    sp_rows = sparse_path_bench(fast=fast)
     med = lambda xs: sorted(xs)[len(xs) // 2]
     sparse_med = med([r["sparse_us"] for r in rows])
     mxu_med = med([r["mxu_us"] for r in attn_rows])
@@ -179,6 +291,18 @@ def bench(fast: bool = False):
         "mxu_vs_jnp_median": med([r["mxu_vs_jnp"] for r in attn_rows]),
         "popcount_vs_mxu_median": med(
             [r["popcount_vs_mxu"] for r in attn_rows]),
+        # tile-vs-decoded on fine-grained/ragged patterns (DESIGN.md §9):
+        # the tile skip is ~0 there by construction, so the decoded MAC
+        # reduction is the whole sparse-engine story in that regime
+        "sparse_path_points": len(sp_rows),
+        "decoded_max_modeled_speedup": max(
+            r["decoded_modeled_speedup"] for r in sp_rows),
+        "tile_skip_on_ragged_max": max(
+            r["tile_skip_fraction"] for r in sp_rows),
+        "decoded_auto_wins": sum(
+            1 for r in sp_rows if r["auto_choice"] == "decoded"),
+        "sched_agreement_median": med(
+            [r["sched_agreement"] for r in sp_rows]),
         # Fig. 5 overlap model on measured engine medians (us events)
         "measured_overlap": {
             "sparse_op_us": round(sparse_med, 1),
@@ -189,15 +313,19 @@ def bench(fast: bool = False):
                 measured_overlap_efficiency(sparse_med, mxu_med), 4),
         },
     }
-    return rows + attn_rows, derived
+    return rows + attn_rows + sp_rows, derived
 
 
 def to_blob(rows, derived):
     """Split the tagged row list into the artifact layout
-    ({'rows': linear, 'attention_rows': attention, 'derived': ...})."""
-    return {"rows": [r for r in rows if r.get("bench") != "attention"],
+    ({'rows': linear, 'attention_rows': attention, 'sparse_path_rows':
+    tile-vs-decoded, 'derived': ...})."""
+    return {"rows": [r for r in rows
+                     if r.get("bench") not in ("attention", "sparse_path")],
             "attention_rows": [r for r in rows
                                if r.get("bench") == "attention"],
+            "sparse_path_rows": [r for r in rows
+                                 if r.get("bench") == "sparse_path"],
             "derived": derived}
 
 
@@ -224,6 +352,13 @@ def main():
         print(f"{'x'.join(map(str, r['shape']))},{r['causal']},"
               f"{r['jnp_us']},{r['mxu_us']},{r['popcount_us']},"
               f"{r['mxu_vs_jnp']},{r['popcount_vs_mxu']}")
+    print("pattern,shape,tile_skip,decoded_mac_reduction,"
+          "decoded_modeled_speedup,sched_agreement,auto")
+    for r in blob["sparse_path_rows"]:
+        print(f"{r['pattern']},{'x'.join(map(str, r['shape']))},"
+              f"{r['tile_skip_fraction']},{r['decoded_mac_reduction']},"
+              f"{r['decoded_modeled_speedup']},{r['sched_agreement']},"
+              f"{r['auto_choice']}")
     print(json.dumps(derived))
 
 

@@ -17,8 +17,11 @@ CONFIG = ModelConfig(
     # the binary engine (binary='auto' picks the fused MXU kernel once
     # the attention volume clears the same flop floor). The floor keeps
     # CPU smoke shapes on the plain XLA paths (engine dispatch is still
-    # exercised — it just resolves dense/jnp there).
-    engine=EngineConfig(mode="auto"),
+    # exercised — it just resolves dense/jnp there). sparse='auto' lets
+    # eager (non-jit) sparse calls pick the gather-compacted decoded
+    # datapath from the occupancy histogram when the spikes are ragged
+    # rather than tile-coherent (DESIGN.md §9).
+    engine=EngineConfig(mode="auto", sparse="auto"),
 )
 
 SMOKE = CONFIG.replace(

@@ -10,9 +10,14 @@ anything whose input is a {0,1} spike tensor) routes through
 
   * ``dense``  — plain XLA dot, fp32 accumulation (the measurement
     baseline every perf PR compares against), and
-  * ``sparse`` — the block-sparse ``spike_matmul`` Pallas kernel, which
-    skips all-zero (block_m x block_k) spike tiles via the occupancy map
-    (the MXU-granularity multi-lane decode).
+  * ``sparse`` — one of two zero-skipping Pallas datapaths, selected by
+    ``EngineConfig.sparse`` (tile | decoded | auto, DESIGN.md §9):
+    the block-sparse ``spike_matmul`` kernel skips all-zero (block_m x
+    block_k) spike tiles via the occupancy map, and the gather-compacted
+    ``spike_decode`` kernel prefix-compacts each row's non-zero
+    K-indices and contracts only the live weight rows, with rows binned
+    into pow2 occupancy buckets for uniform per-step work (the
+    fine-grained/ragged-sparsity regime the tile skip can't touch).
 
 Binary engine — every spiking self-attention (``core.attention.
 spiking_attention``, the transformer family's spiking SSA) consults
@@ -54,6 +59,9 @@ import jax
 import jax.numpy as jnp
 
 
+SPARSE_PATHS = ("tile", "decoded")
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     """Dual-engine dispatch knobs (per model, set on ModelConfig.engine).
@@ -63,8 +71,26 @@ class EngineConfig:
       matmul's flop volume clears ``min_flops`` (occupancy staging and
       per-block control flow need real work to amortize — and it keeps
       CPU smoke configs on the fast XLA path).
-    block_*: VMEM tile sizes of the kernel; (block_m x block_k) is also
-      the skip granularity.
+    sparse: 'tile' | 'decoded' | 'auto' — which sparse datapath a
+      sparse-resolved matmul runs (DESIGN.md §9):
+      - 'tile': the block-occupancy kernel (skips whole block_m x
+        block_k spike tiles) — the conservative default, profitable at
+        *coherent* sparsity;
+      - 'decoded': the gather-compacted kernel
+        (kernels/spike_decode.py) — per-row non-zero K-indices are
+        prefix-compacted and only the live weight rows are contracted,
+        with rows binned into pow2 occupancy buckets so every grid step
+        does uniform work. Wins at fine-grained / ragged sparsity where
+        whole tiles almost never go dark;
+      - 'auto': picks per call from the *concrete* occupancy histogram
+        (kernels/spike_decode.choose_sparse_path — tile skip fraction
+        vs bucket-schedule MAC fraction with the decoded path's
+        overhead handicap). Under jit the spikes are traced and the
+        histogram is unobservable, so auto falls back to 'tile' — the
+        same static-dispatch principle as ``mode`` / ``binary``.
+    block_*: VMEM tile sizes of the kernel; (block_m x block_k) is the
+      tile path's skip granularity and block_k doubles as the decoded
+      path's compacted-chunk width.
 
     Binary engine (spiking self-attention):
     binary: 'jnp' | 'mxu_kernel' | 'popcount' | 'auto'. 'auto' picks the
@@ -91,6 +117,7 @@ class EngineConfig:
     interpret: force Pallas interpret mode (None = auto: off-TPU only).
     """
     mode: str = "auto"
+    sparse: str = "tile"
     block_m: int = 128
     block_n: int = 128
     block_k: int = 128
@@ -106,6 +133,9 @@ class EngineConfig:
         if self.weights not in ("fp32", "int8", "int4"):
             raise ValueError(f"unknown weights datapath {self.weights!r} "
                              f"(expected fp32|int8|int4)")
+        if self.sparse not in SPARSE_PATHS + ("auto",):
+            raise ValueError(f"unknown sparse datapath {self.sparse!r} "
+                             f"(expected tile|decoded|auto)")
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
@@ -164,6 +194,33 @@ def resolve_mode(engine: Optional[EngineConfig], m: int, k: int, n: int
     return "sparse" if 2 * m * k * n >= engine.min_flops else "dense"
 
 
+def resolve_sparse_path(engine: Optional[EngineConfig],
+                        s2d: Optional[jax.Array] = None) -> str:
+    """Tile-vs-decoded decision for a sparse-resolved matmul.
+
+    Static when it has to be: 'auto' consults the concrete occupancy
+    histogram (the decoded path's per-call crossover, DESIGN.md §9) only
+    when the spikes are concrete — under jit the input is a tracer and
+    auto resolves 'tile', the conservative static default. On a real TPU
+    backend auto also resolves 'tile': the decoded kernel's in-kernel
+    row gather is validated in interpret mode but not yet against Mosaic
+    lowering (DESIGN.md §9 caveat), so auto never volunteers it there —
+    an explicit 'tile'/'decoded' declaration is honored everywhere.
+    """
+    if engine is None:
+        return "tile"
+    if engine.sparse in SPARSE_PATHS:
+        return engine.sparse
+    if engine.sparse != "auto":
+        raise ValueError(f"unknown sparse datapath {engine.sparse!r}")
+    if s2d is None or isinstance(s2d, jax.core.Tracer):
+        return "tile"
+    if jax.default_backend() == "tpu":
+        return "tile"
+    from repro.kernels.spike_decode import choose_sparse_path  # lazy
+    return choose_sparse_path(s2d, engine.block_m, engine.block_k)
+
+
 BINARY_MODES = ("jnp", "mxu_kernel", "popcount")
 
 
@@ -187,27 +244,33 @@ def resolve_binary_mode(engine: Optional[EngineConfig], bh: int, l: int,
 
 
 # ---------------------------------------------------------------------------
-# sparse path: Pallas kernel fwd, dense-transpose bwd
+# sparse path: Pallas kernel fwd (tile or decoded), dense-transpose bwd
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def _sparse_matmul(s2d, w, b, block_m, block_n, block_k, interpret):
-    from repro.kernels.spike_matmul import spike_matmul  # lazy: no cycle
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _sparse_matmul(s2d, w, b, block_m, block_n, block_k, path, interpret):
     # keep the fp32 accumulator: spike_linear casts once to the
     # activation dtype, exactly like the dense reference — a w.dtype
     # round-trip here would break bit-parity for mixed dtypes.
+    if path == "decoded":
+        from repro.kernels.spike_decode import gather_spike_matmul  # lazy
+        return gather_spike_matmul(s2d, w, bias=b, block_m=block_m,
+                                   block_n=block_n, c_block=block_k,
+                                   interpret=interpret)
+    from repro.kernels.spike_matmul import spike_matmul  # lazy: no cycle
     return spike_matmul(s2d, w, bias=b, block_m=block_m, block_n=block_n,
                         block_k=block_k, out_dtype=jnp.float32,
                         interpret=interpret)
 
 
-def _sparse_fwd(s2d, w, b, block_m, block_n, block_k, interpret):
-    out = _sparse_matmul(s2d, w, b, block_m, block_n, block_k, interpret)
+def _sparse_fwd(s2d, w, b, block_m, block_n, block_k, path, interpret):
+    out = _sparse_matmul(s2d, w, b, block_m, block_n, block_k, path,
+                         interpret)
     return out, (s2d, w, b)
 
 
-def _sparse_bwd(block_m, block_n, block_k, interpret, res, g):
+def _sparse_bwd(block_m, block_n, block_k, path, interpret, res, g):
     s2d, w, b = res
     g32 = g.astype(jnp.float32)
     ds = jnp.dot(g32, w.astype(jnp.float32).T,
@@ -227,9 +290,15 @@ _sparse_matmul.defvjp(_sparse_fwd, _sparse_bwd)
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9))
 def _quant_sparse_matmul(s2d, qw, scale, b, block_m, block_n, block_k,
-                         counts, interpret):
+                         path, counts, interpret):
+    if path == "decoded":
+        from repro.kernels.spike_decode import \
+            quant_gather_spike_matmul  # lazy
+        return quant_gather_spike_matmul(
+            s2d, qw, scale, bias=b, block_m=block_m, block_n=block_n,
+            c_block=block_k, counts=counts, interpret=interpret)
     from repro.kernels.spike_matmul import quant_spike_matmul  # lazy
     return quant_spike_matmul(s2d, qw, scale, bias=b, block_m=block_m,
                               block_n=block_n, block_k=block_k,
@@ -237,13 +306,14 @@ def _quant_sparse_matmul(s2d, qw, scale, b, block_m, block_n, block_k,
 
 
 def _quant_sparse_fwd(s2d, qw, scale, b, block_m, block_n, block_k,
-                      counts, interpret):
+                      path, counts, interpret):
     out = _quant_sparse_matmul(s2d, qw, scale, b, block_m, block_n,
-                               block_k, counts, interpret)
+                               block_k, path, counts, interpret)
     return out, (s2d, qw, scale, b)
 
 
-def _quant_sparse_bwd(block_m, block_n, block_k, counts, interpret, res, g):
+def _quant_sparse_bwd(block_m, block_n, block_k, path, counts, interpret,
+                      res, g):
     """ds flows through the *dequantized* weights (the fp32 function the
     int kernel computes); int8 codes get a float0 cotangent (integer
     leaves are non-differentiable); scale/bias get their true grads so a
@@ -357,14 +427,16 @@ def spike_linear(p: Dict[str, Any], x: jax.Array, *,
     if resolve_mode(engine, m, k, n) == "dense":
         return dense_quant_linear(p, x) if quantized \
             else dense_spike_linear(p, x)
+    x2d = x.reshape(-1, k)
+    path = resolve_sparse_path(engine, x2d)
     if quantized:
         out = _quant_sparse_matmul(
-            x.reshape(-1, k).astype(jnp.float32), _unpacked_qw(p, k),
+            x2d.astype(jnp.float32), _unpacked_qw(p, k),
             p["scale"].astype(jnp.float32), p.get("b"),
             engine.block_m, engine.block_n, engine.block_k,
-            counts, engine.interpret)
+            path, counts, engine.interpret)
     else:
-        out = _sparse_matmul(x.reshape(-1, k), p["w"], p.get("b"),
+        out = _sparse_matmul(x2d, p["w"], p.get("b"),
                              engine.block_m, engine.block_n, engine.block_k,
-                             engine.interpret)
+                             path, engine.interpret)
     return out.reshape(*x.shape[:-1], n).astype(x.dtype)

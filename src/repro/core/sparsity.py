@@ -18,10 +18,15 @@ one with *at least M set bits strictly before it*, i.e. ``i_n ∧ c_n^{M-1}``
 implement that semantics and pin it with property tests
 (every set bit is extracted exactly once, in order, M per cycle).
 
-On TPU this fine-grained index extraction is *not* the production path (see
-DESIGN.md §3) — it feeds the cycle-level simulator in ``repro.sim`` that
-reproduces the paper's Figs. 12/13, and the block-occupancy reduction used by
-the ``spike_matmul`` kernel is its MXU-granularity adaptation.
+On TPU this bit-serial lane model is the *reference*, not the production
+loop: it feeds the cycle-level simulator in ``repro.sim`` that reproduces
+the paper's Figs. 12/13, and it pins two hot-path adaptations — the
+block-occupancy reduction of the ``spike_matmul`` tile kernel (DESIGN.md
+§3) and the cumsum prefix-compaction of the gather-compacted decoded
+datapath (``kernels/spike_decode.decode_indices``, DESIGN.md §9), whose
+compacted index stream must chunk back into exactly these per-cycle lane
+sets (property-pinned in tests/test_spike_decode.py against
+:func:`prefix_compact` / :func:`multilane_decode_full`).
 """
 from __future__ import annotations
 
@@ -79,6 +84,25 @@ def multilane_decode_full(bits: np.ndarray, m_lanes: int):
         idx = np.nonzero(onehots.any(axis=0))[0]
         cycles.append(idx)
     return cycles, len(cycles)
+
+
+def prefix_compact(bits: np.ndarray):
+    """Numpy reference of the cumsum prefix-compaction (Eq. 5 collapsed
+    to ranks): the (r+1)-th set bit of the bitmap lands in compacted slot
+    ``r`` — i.e. lane ``r % M`` of decode cycle ``r // M`` for an M-lane
+    decoder, whatever M is. Returns (indices ascending, popcount).
+
+    This is the software contract of the decoded datapath's on-device
+    compaction (``kernels/spike_decode.decode_indices``): chunking the
+    returned indices by M reproduces ``multilane_decode_full``'s
+    per-cycle index sets exactly.
+    """
+    bits = np.asarray(bits).astype(bool)
+    rank = np.cumsum(bits) - 1
+    idx = np.zeros(bits.shape[-1], dtype=np.int64)
+    idx[rank[bits]] = np.nonzero(bits)[0]
+    pc = int(bits.sum())
+    return idx[:pc], pc
 
 
 def naive_first_m_indices(bits: np.ndarray, m_lanes: int) -> np.ndarray:

@@ -1,7 +1,11 @@
 """Pallas TPU kernels for FireFly-T's two compute hot-spots:
 
   spike_attention    — fused binary attention (binary engine, MXU form)
-  spike_matmul       — block-sparse spike x weight matmul (sparse engine)
+  spike_matmul       — block-sparse spike x weight matmul (sparse engine,
+                       tile datapath: whole-tile occupancy skip)
+  spike_decode       — gather-compacted spike matmul (sparse engine,
+                       decoded datapath: cumsum prefix-compaction +
+                       pow2 occupancy-bucket load balancing)
   lif                — fused LIF membrane scan (neuronal dynamics module)
   popcount_attention — bit-packed AND-PopCount scores (faithful FPGA port,
                        kept for comparison; the MXU form wins on TPU)

@@ -1,0 +1,409 @@
+"""Fine-grained sparse-decoder datapath: gather-compacted spike matmul.
+
+The third sparse-engine mode (DESIGN.md §9). The tile kernel
+(``spike_matmul``) only skips *whole* (block_m x block_k) spike tiles, so
+fine-grained or ragged sparsity — rows whose live channels are scattered
+rather than coherently blocked, the regime FireFly-S shows dominates real
+SNN activations — gets zero speedup there. This module is the
+MXU-granularity translation of the paper's full sparse-decoder pipeline
+(§IV-A): decode, dispatch only the touched weight rows, and balance the
+load so no worker waits on the densest row.
+
+  paper (FPGA)                      | here (TPU)
+  ----------------------------------|----------------------------------
+  M-lane carry-lookahead decode     | ``decode_indices``: cumsum
+  (Eq. 5 propagate/generate chain   | prefix-compaction — the rank of
+  extracts M nonzero indices/cycle) | each set bit IS the lane/cycle it
+                                    | decodes in; pinned equivalent to
+                                    | ``core.sparsity.
+                                    | multilane_decode_full`` by test
+  out-of-order weight dispatch      | the kernel gathers only the live
+  (fetch only touched weight rows)  | weight rows ``w[idx]`` per
+                                    | compacted chunk
+  input tracker / load balancing    | ``build_schedule``: rows sorted by
+  (no worker stalls on a dense      | occupancy into block_m groups,
+  word)                             | each group's capacity rounded to a
+                                    | pow2 bucket — every grid step in a
+                                    | bucket does uniform work, steps
+                                    | past a group's bucket are skipped
+
+The contraction: ``y[m] = sum_i vals[m, i] * w[idx[m, i]]`` over the
+compacted dim, fp32 (or int32) accumulation in compacted ascending-k
+order, bias after the final accumulation — term-for-term the dense
+reference on the live entries, so decoded-vs-dense is bitwise equal
+whenever fp32 accumulation is order-exact (dyadic weights; same contract
+as tile mode, pinned in tests/test_spike_decode.py). Carrying the
+*values* (not just a live mask) makes the same kernel exact for the
+binary-attention integer counts the wo projection consumes.
+
+Off-TPU the kernels run in Pallas interpret mode (bit-exact lax
+lowering). On TPU the in-kernel row gather ``w[idx]`` needs a
+gather-capable Mosaic; ``sparse='tile'`` remains the conservative
+datapath and ``auto`` only selects the decoded path from a concrete
+occupancy histogram (DESIGN.md §9).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.bitpack import pad_to_multiple
+
+# Crossover factor for ``sparse='auto'`` (DESIGN.md §9): a decoded MAC
+# costs more than a tile MAC (row gather + batched matvec vs pure
+# 128x128 MXU tiles), so the decoded path must cut modeled MACs by at
+# least this factor below the tile path's before auto picks it.
+DECODED_OVERHEAD = 2.0
+
+
+def pow2ceil(x: jax.Array) -> jax.Array:
+    """Elementwise smallest power of two >= x (0 -> 0, 1 -> 1). Integer
+    bit-twiddling via ``lax.clz`` — no float log2 round-off."""
+    x = x.astype(jnp.int32)
+    p = 1 << (32 - jax.lax.clz(jnp.maximum(x, 1) - 1))
+    return jnp.where(x <= 1, jnp.maximum(x, 0), p)
+
+
+def decode_indices(s: jax.Array, cap: Optional[int] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Compact each row's non-zero K-indices by cumsum prefix-compaction.
+
+    s: (M, K). Returns (idx (M, cap) int32, occ (M,) int32): ``idx[m,
+    :occ[m]]`` are the positions of row m's non-zeros, ascending; padding
+    slots hold 0 (masked by occ downstream). The rank ``cumsum(bits) - 1``
+    of each set bit is exactly the slot the M-lane carry-lookahead decoder
+    fires it in (lane ``rank % M`` of cycle ``rank // M``), so chunking
+    ``idx`` by the lane count reproduces ``multilane_decode_full``'s
+    per-cycle index sets — pinned by property test.
+
+    ``cap`` (default K) statically bounds the compacted width; rows with
+    more non-zeros than ``cap`` would be silently truncated, so concrete
+    inputs are guarded (traced inputs trust the caller's bound).
+    """
+    m, k = s.shape
+    bits = s != 0
+    occ = bits.sum(-1).astype(jnp.int32)
+    cap = k if cap is None else min(cap, k)
+    if cap < k and not isinstance(occ, jax.core.Tracer):
+        hi = int(jnp.max(occ)) if m else 0
+        if hi > cap:
+            raise ValueError(f"decode cap {cap} < max row occupancy {hi}")
+    rank = jnp.cumsum(bits, axis=-1).astype(jnp.int32) - 1
+    slot = jnp.where(bits, rank, cap)            # dead bits -> spill slot
+    cols = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32)[None], (m, k))
+    idx = jnp.zeros((m, cap + 1), jnp.int32).at[
+        jnp.arange(m)[:, None], slot].set(cols, mode="drop")
+    return idx[:, :cap], occ
+
+
+def build_schedule(occ: jax.Array, block_m: int, c_block: int, cap: int):
+    """Occupancy-binned load-balancing schedule (the OoO/weight-dispatch
+    analog). Rows sort ascending by occupancy into ``block_m`` groups;
+    each group's capacity is its max occupancy rounded up to a pow2
+    bucket (clipped to the padded compacted width). Uniform work per
+    bucket: a grid step is either fully live or skipped, so no tile
+    waits on the densest row — the dense rows share a group.
+
+    occ: (M,) per-row non-zero counts (M % block_m == 0 — pad first).
+    Returns dict with ``order`` (ascending-occupancy row permutation),
+    ``caps`` (n_groups,), per-group ``steps``, ``executed``/``total``
+    c_block-step counts per N tile, and ``mac_fraction`` =
+    executed/total (the decoded path's modeled MAC share vs a dense
+    sweep of the compacted width). Mirrored bit-for-bit by the numpy
+    twin ``sim.balance_sim.bucket_schedule`` (cross-validated in tests
+    and benchmarks/dual_engine_bench.py).
+    """
+    m = occ.shape[0]
+    assert m % block_m == 0, f"pad rows first: {m} % {block_m}"
+    cp = max(c_block, -(-cap // c_block) * c_block)
+    order = jnp.argsort(occ)                      # stable, ascending
+    gmax = occ[order].reshape(m // block_m, block_m).max(axis=1)
+    caps = jnp.minimum(pow2ceil(gmax), cp).astype(jnp.int32)
+    steps = -(-caps // c_block)
+    nc = cp // c_block
+    executed = steps.sum()
+    total = (m // block_m) * nc
+    return {"order": order, "caps": caps, "steps": steps,
+            "executed": executed, "total": total, "padded_cap": cp,
+            "mac_fraction": executed / total}
+
+
+def choose_sparse_path(s: jax.Array, block_m: int, block_k: int) -> str:
+    """Per-call tile-vs-decoded decision from the concrete occupancy
+    histogram (``sparse='auto'``, DESIGN.md §9). Tile skip wins at
+    coherent sparsity (dark whole tiles), decoded wins at fine-grained /
+    ragged sparsity (live tiles with few live rows); the crossover rule
+    compares modeled MAC fractions with the decoded path handicapped by
+    ``DECODED_OVERHEAD``.
+
+    The occupancy reduction here is recomputed by the kernel's staging
+    when 'decoded' wins — deliberate: the engine's custom-VJP static
+    args can't carry arrays, the chooser only runs on eager (non-jit)
+    calls, and the duplicated work is O(M*K), ~1/N of the matmul it
+    gates.
+    """
+    from repro.kernels.spike_matmul import block_occupancy
+    m, k = s.shape
+    bm, bk = min(block_m, m), min(block_k, k)
+    sp = pad_to_multiple(pad_to_multiple(s, 0, bm), 1, bk)
+    tile_frac = float(block_occupancy(sp, bm, bk).mean())
+    smp = pad_to_multiple(s, 0, bm)
+    occ = (smp != 0).sum(-1).astype(jnp.int32)
+    sched = build_schedule(occ, bm, bk, cap=k)
+    dec_frac = float(sched["mac_fraction"]) * sched["padded_cap"] / max(k, 1)
+    return "decoded" if dec_frac * DECODED_OVERHEAD < tile_frac else "tile"
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+
+def _gather_block(idx_ref, w_ref):
+    """Gather the live weight rows of this compacted chunk: (block_m,
+    c_block) indices into the (K, block_n) resident weight tile ->
+    (block_m, c_block, block_n). This is the weight-dispatch stage — only
+    touched rows enter the contraction."""
+    return w_ref[...][idx_ref[...]]
+
+
+def _contract(val_blk, gw, acc_dtype):
+    """Batched row contraction on the compacted dim: (block_m, 1, c) x
+    (block_m, c, block_n) -> (block_m, block_n)."""
+    return jax.lax.dot_general(
+        val_blk[:, None, :], gw, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=acc_dtype)[:, 0, :]
+
+
+def _kernel(cap_ref, idx_ref, val_ref, w_ref, o_ref, *, c_block, nc):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(ci * c_block < cap_ref[0, 0])
+    def _compute():
+        gw = _gather_block(idx_ref, w_ref).astype(jnp.float32)
+        o_ref[...] += _contract(val_ref[...].astype(jnp.float32), gw,
+                                jnp.float32)
+
+
+def _kernel_bias(cap_ref, idx_ref, val_ref, w_ref, b_ref, o_ref, *,
+                 c_block, nc):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(ci * c_block < cap_ref[0, 0])
+    def _compute():
+        gw = _gather_block(idx_ref, w_ref).astype(jnp.float32)
+        o_ref[...] += _contract(val_ref[...].astype(jnp.float32), gw,
+                                jnp.float32)
+
+    @pl.when(ci == nc - 1)
+    def _bias():                      # after the final accumulation,
+        o_ref[...] += b_ref[...].astype(jnp.float32)  # like the dense ref
+
+
+def _qkernel(cap_ref, idx_ref, val_ref, w_ref, scale_ref, o_ref, acc_ref,
+             *, c_block, nc):
+    """Quantized decoded body: gathered int8 weight rows x spike/count
+    lanes with an int32 VMEM accumulator; per-output-channel fp32 scale
+    in the epilogue on the last grid step (which always executes — only
+    the compute steps past a group's bucket are skipped)."""
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(ci * c_block < cap_ref[0, 0])
+    def _compute():
+        gw = _gather_block(idx_ref, w_ref)
+        acc_ref[...] += _contract(val_ref[...], gw, jnp.int32)
+
+    @pl.when(ci == nc - 1)
+    def _epilogue():
+        o_ref[...] = acc_ref[...].astype(jnp.float32) * \
+            scale_ref[...].astype(jnp.float32)
+
+
+def _qkernel_bias(cap_ref, idx_ref, val_ref, w_ref, scale_ref, b_ref,
+                  o_ref, acc_ref, *, c_block, nc):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(ci * c_block < cap_ref[0, 0])
+    def _compute():
+        gw = _gather_block(idx_ref, w_ref)
+        acc_ref[...] += _contract(val_ref[...], gw, jnp.int32)
+
+    @pl.when(ci == nc - 1)
+    def _epilogue():
+        o_ref[...] = acc_ref[...].astype(jnp.float32) * \
+            scale_ref[...].astype(jnp.float32) + \
+            b_ref[...].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# staging shared by the fp32 and quantized entries
+# ---------------------------------------------------------------------------
+
+
+def _stage(s, block_m, c_block, cap):
+    """Pad rows, decode + compact, sort by occupancy, build the bucket
+    schedule. Returns (idx, vals, caps2d, order, schedule) with idx/vals
+    already permuted into schedule order and padded to (Mp, Cp); vals
+    carry the actual input values on live slots (1.0 for spikes, the
+    integer counts for binary-attention contexts) and exact 0 elsewhere.
+    """
+    k = s.shape[1]
+    sp = pad_to_multiple(s, 0, block_m)
+    idx, occ = decode_indices(sp, cap=cap)
+    sched = build_schedule(occ, block_m, c_block, cap=idx.shape[1])
+    idx = pad_to_multiple(idx, 1, c_block)
+    mask = jnp.arange(idx.shape[1], dtype=jnp.int32)[None] < occ[:, None]
+    vals = jnp.where(mask, jnp.take_along_axis(sp, idx, axis=1), 0)
+    order = sched["order"]
+    caps2d = sched["caps"].reshape(-1, 1)
+    return idx[order], vals[order], caps2d, order, sched
+
+
+def _specs(block_m, block_n, c_block, kw):
+    """(caps, idx, vals, w) block specs; weights stay fully K-resident
+    per N tile so any row index in the chunk can be gathered."""
+    return [
+        pl.BlockSpec((1, 1), lambda gi, ni, ci: (gi, 0)),
+        pl.BlockSpec((block_m, c_block), lambda gi, ni, ci: (gi, ci)),
+        pl.BlockSpec((block_m, c_block), lambda gi, ni, ci: (gi, ci)),
+        pl.BlockSpec((kw, block_n), lambda gi, ni, ci: (0, ni)),
+    ]
+
+
+def gather_spike_matmul(s: jax.Array, w: jax.Array, *,
+                        bias: Optional[jax.Array] = None,
+                        block_m: int = 128, block_n: int = 128,
+                        c_block: int = 128, cap: Optional[int] = None,
+                        interpret: Optional[bool] = None) -> jax.Array:
+    """y = s @ w (+ bias) through the gather-compacted decoded datapath.
+
+    s: (M, K) spikes (or sparse integer counts — values are carried, not
+    assumed binary), w: (K, N) -> (M, N) fp32. Each row's non-zero
+    K-indices are prefix-compacted on-device, rows are binned into pow2
+    occupancy buckets (sorted into block_m groups), and the kernel
+    contracts only the live weight rows — grid steps past a group's
+    bucket capacity are skipped, so MACs scale with the *occupancy
+    histogram*, not with K x the live-tile count.
+
+    ``cap`` statically bounds the compacted width (default K: exact for
+    any input, still skipping by bucket). Eager callers that know the
+    max occupancy can pass a smaller cap to shrink the staged tensors.
+    """
+    m, k = s.shape
+    k2, n = w.shape
+    assert k == k2, f"spikes K={k} vs weight K={k2}"
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    c_block = min(c_block, k if cap is None else max(1, cap))
+
+    idx, vals, caps2d, order, sched = _stage(s, block_m, c_block, cap)
+    wp = pad_to_multiple(w, 1, block_n)
+    mp, cp = idx.shape
+    np_ = wp.shape[1]
+    grid = (mp // block_m, np_ // block_n, cp // c_block)
+
+    in_specs = _specs(block_m, block_n, c_block, k)
+    operands = [caps2d, idx, vals.astype(jnp.float32), wp]
+    if bias is None:
+        kernel = functools.partial(_kernel, c_block=c_block, nc=grid[2])
+    else:
+        kernel = functools.partial(_kernel_bias, c_block=c_block,
+                                   nc=grid[2])
+        in_specs.append(pl.BlockSpec((1, block_n),
+                                     lambda gi, ni, ci: (0, ni)))
+        operands.append(pad_to_multiple(bias.reshape(1, n), 1, block_n))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda gi, ni, ci: (gi, ni)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(*operands)
+    return out[jnp.argsort(order)][:m, :n]
+
+
+def quant_gather_spike_matmul(s: jax.Array, qw: jax.Array,
+                              scale: jax.Array, *,
+                              bias: Optional[jax.Array] = None,
+                              block_m: int = 128, block_n: int = 128,
+                              c_block: int = 128,
+                              cap: Optional[int] = None,
+                              counts: bool = False,
+                              interpret: Optional[bool] = None
+                              ) -> jax.Array:
+    """Decoded datapath against int8 weight codes: y = (s @ qw) * scale
+    (+ bias), int32 accumulation over the gathered rows, per-channel
+    scale in the epilogue — the same dual-side compression as
+    ``quant_spike_matmul`` at compacted-row granularity. ``counts=True``
+    rides the left operand on int32 lanes (binary-attention counts wrap
+    int8 at 128); spikes stay int8.
+    """
+    m, k = s.shape
+    k2, n = qw.shape
+    assert k == k2, f"spikes K={k} vs weight K={k2}"
+    assert qw.dtype == jnp.int8, f"quant kernel wants int8 codes, got " \
+        f"{qw.dtype} (unpack int4 nibbles first)"
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    c_block = min(c_block, k if cap is None else max(1, cap))
+
+    idx, vals, caps2d, order, sched = _stage(s, block_m, c_block, cap)
+    wp = pad_to_multiple(qw, 1, block_n)
+    mp, cp = idx.shape
+    np_ = wp.shape[1]
+    grid = (mp // block_m, np_ // block_n, cp // c_block)
+
+    in_specs = _specs(block_m, block_n, c_block, k)
+    in_specs.append(pl.BlockSpec((1, block_n),
+                                 lambda gi, ni, ci: (0, ni)))
+    operands = [caps2d, idx,
+                vals.astype(jnp.int32 if counts else jnp.int8), wp,
+                pad_to_multiple(scale.reshape(1, n).astype(jnp.float32),
+                                1, block_n)]
+    if bias is None:
+        kernel = functools.partial(_qkernel, c_block=c_block, nc=grid[2])
+    else:
+        kernel = functools.partial(_qkernel_bias, c_block=c_block,
+                                   nc=grid[2])
+        in_specs.append(pl.BlockSpec((1, block_n),
+                                     lambda gi, ni, ci: (0, ni)))
+        operands.append(pad_to_multiple(
+            bias.reshape(1, n).astype(jnp.float32), 1, block_n))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda gi, ni, ci: (gi, ni)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        interpret=interpret,
+    )(*operands)
+    return out[jnp.argsort(order)][:m, :n]

@@ -16,6 +16,12 @@ simultaneously; each PE extracts its non-zeros with decoder throughput G
 the broadcast rarely stalls; Observation 2: one wide vector beats several
 narrow ones). Advance when the slowest PE finishes:
 ``cycles_j = max_pe max(1, ceil(pc[pe, j] / G))``.
+
+Beyond the paper figures, :func:`bucket_schedule` /
+:func:`predicted_schedule` model the production decoded datapath
+(``kernels/spike_decode.py``): the same max-of-the-group advance rule,
+restated as MXU grid steps over pow2 occupancy buckets, cross-validated
+against the measured kernel schedule by the dual-engine bench.
 """
 from __future__ import annotations
 
@@ -111,6 +117,72 @@ def unified_latency(pc: np.ndarray, throughput: int,
         pc = pc.reshape(n_pes, -1, width_scale).sum(axis=2)
     cycles = np.maximum(1, -(-pc // throughput))   # (P, n_words)
     return int(cycles.max(axis=0).sum())
+
+
+# ---------------------------------------------------------------------------
+# Decoded-datapath bucket schedule (the TPU translation of the unified
+# wide-bank idea — kernels/spike_decode.py executes this schedule)
+# ---------------------------------------------------------------------------
+
+
+def _pow2ceil(x: np.ndarray) -> np.ndarray:
+    x = np.asarray(x, dtype=np.int64)
+    out = np.array([0 if v <= 0 else (1 if v == 1 else
+                    1 << int(v - 1).bit_length()) for v in x.ravel()],
+                   dtype=np.int64)
+    return out.reshape(x.shape)
+
+
+def bucket_schedule(occ: np.ndarray, block_m: int, c_block: int, cap: int):
+    """Numpy twin of ``kernels/spike_decode.build_schedule`` — the
+    predicted bucket schedule of the gather-compacted datapath.
+
+    Same move as :func:`unified_latency`, translated to MXU grid steps:
+    the unified bank advances when the slowest PE in a broadcast word
+    finishes (``max_pe ceil(pc/G)``), and the decoded kernel's grid step
+    covers a block_m row group whose cost is ``ceil(cap_g / c_block)``
+    with ``cap_g = pow2ceil(max occupancy in group)`` — sorting rows by
+    occupancy first is what keeps that max tight (the out-of-order /
+    weight-dispatch analog: the densest rows share a group instead of
+    straggling every group).
+
+    occ: per-row non-zero counts; rows pad with zeros to a block_m
+    multiple. Returns a dict with per-group ``caps``/``steps``, the
+    ``executed``/``total`` step counts per N tile, ``mac_fraction`` =
+    executed/total, and the pow2 ``buckets`` histogram {capacity:
+    n_groups}. Cross-validated against the measured kernel schedule in
+    ``benchmarks/dual_engine_bench.py`` and pinned equal to the jnp
+    implementation in tests.
+    """
+    occ = np.asarray(occ, dtype=np.int64).ravel()
+    pad = (-len(occ)) % block_m
+    if pad:
+        occ = np.concatenate([occ, np.zeros(pad, np.int64)])
+    cp = max(c_block, -(-cap // c_block) * c_block)
+    occ_sorted = np.sort(occ)
+    gmax = occ_sorted.reshape(-1, block_m).max(axis=1)
+    caps = np.minimum(_pow2ceil(gmax), cp)
+    steps = -(-caps // c_block)
+    nc = cp // c_block
+    executed = int(steps.sum())
+    total = len(gmax) * nc
+    buckets = {int(c): int((caps == c).sum()) for c in np.unique(caps)}
+    return {"caps": caps, "steps": steps, "executed": executed,
+            "total": total, "padded_cap": cp, "buckets": buckets,
+            "mac_fraction": executed / total}
+
+
+def predicted_schedule(n_rows: int, k: int, density, block_m: int,
+                       c_block: int, rng: np.random.Generator):
+    """Predicted bucket schedule from the *density model* alone (no
+    spike tensor): per-row occupancies are Binomial(k, density) with
+    ``density`` a scalar (fine-grained i.i.d. firing) or per-row array
+    (ragged firing). This is the sim side of the bench cross-validation;
+    the measured side runs ``build_schedule`` on the actual tensor.
+    """
+    d = np.broadcast_to(np.asarray(density, dtype=np.float64), (n_rows,))
+    occ = rng.binomial(k, d)
+    return bucket_schedule(occ, block_m, c_block, cap=k)
 
 
 @dataclass(frozen=True)
