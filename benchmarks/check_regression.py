@@ -51,7 +51,8 @@ def _row_key(prefix, row, fields):
 
 def extract_dual_engine(blob):
     """Sparse-engine sweep: per-point tile skip + modeled speedup, the
-    tile-vs-decoded ragged-pattern rows, and the derived summary."""
+    tile-vs-decoded ragged-pattern rows, and the fused layer step's
+    measured overlap (executed-step counts + schedule ratios)."""
     out = {}
     for r in blob.get("rows", []):
         key = _row_key("linear", r, ("shape", "block", "sparsity"))
@@ -67,6 +68,19 @@ def extract_dual_engine(blob):
             r["decoded_modeled_speedup"], (REL, 0.05))
         out[key + "/sched_agreement"] = (r["sched_agreement"], (ABS, 0.15))
         out[key + "/auto_choice"] = (r["auto_choice"], (EXACT,))
+    for r in blob.get("fused_rows", []):
+        # fused layer step: everything here derives from the kernel's
+        # executed-step counts on fixed-seed inputs — deterministic on
+        # any backend. Executed counts are gated exactly; the schedule
+        # ratios get a hair of float tolerance. Wall clock never gated.
+        key = _row_key("fused", r, ("config", "shape"))
+        for f in ("executed_q", "executed_k", "executed_v",
+                  "executed_attn", "executed_steps", "possible_steps"):
+            out[key + f"/{f}"] = (r[f], (EXACT,))
+        out[key + "/hidden_fraction"] = (r["hidden_fraction"], (ABS, 0.02))
+        out[key + "/step_reduction"] = (r["step_reduction"], (ABS, 0.02))
+        out[key + "/proj_skip_fraction"] = (
+            r["proj_skip_fraction"], (ABS, 0.02))
     # derived aggregates (max/mean over the sweep, auto-win counts) are
     # deliberately NOT gated: they change with the sweep size, so a full
     # run would spuriously drift vs a smoke baseline — the per-row keys

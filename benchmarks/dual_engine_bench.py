@@ -50,8 +50,20 @@ The measured medians also feed the overlap model: ``derived
 (sparse_us, mxu_us) — the Fig. 5 latency-hiding fraction from measured
 engine timings instead of the analytic MAC model.
 
+Fused layer step (``fused_rows``): the ``overlap='fused'`` bundle
+(``kernels/fused_ssa``) on the three spikingformer-shaped SSA
+workloads. Each row feeds the kernel's per-head executed-step counts to
+``core.dual_engine.fused_step_metrics``, so ``hidden_fraction`` here is
+*measured* — derived from the dots the kernel actually ran (dark spike
+slabs skipped, attention pipelined behind the next head's projections)
+with exact per-dot MAC weights — not the analytic model. Those counts
+are deterministic for the fixed PRNG inputs, so CI gates them
+(``benchmarks/check_regression.py``); ``fused_us``/``sequential_us``
+are interpret-mode wall clock on CPU and stay informative-only.
+
 Output: ``artifacts/dual_engine_bench.json`` in the benchmark harness's
-``{"rows": [...], "attention_rows": [...], "derived": {...}}`` format
+``{"rows": [...], "attention_rows": [...], "sparse_path_rows": [...],
+"fused_rows": [...], "derived": {...}}`` format
 (also wired into ``benchmarks/run.py``, which re-emits the same file).
 
 Usage: PYTHONPATH=src python benchmarks/dual_engine_bench.py [--fast]
@@ -122,6 +134,18 @@ SPARSE_PATTERNS = [
 ]
 SPARSE_PATH_SHAPES = [(512, 256, 256), (1024, 256, 512)]
 SPARSE_PATH_BLOCK = 64  # block_m/block_n; block_k doubles as c_block
+
+# fused-step workloads: (name, family, T, B, L, D, heads, head_dim,
+# causal) — the SSA shapes of the three spikingformer configs. The two
+# vision points are projection-dominated (3D >> 2L: little to hide);
+# the token point has L == D, where attention is 2/5 of the serial work
+# and the head pipeline hides most of it (hidden_fraction ~ 0.4).
+FUSED_CONFIGS = [
+    ("spikingformer-4-256", "bn", 4, 2, 64, 256, 8, 32, False),
+    ("spikingformer-8-512", "bn", 4, 1, 64, 512, 8, 64, False),
+    ("spikingformer-lm", "rope", 4, 1, 256, 256, 4, 64, True),
+]
+FUSED_DENSITY = 0.25
 
 
 def _time(fn, *args) -> float:
@@ -235,6 +259,81 @@ def sparse_path_bench(fast: bool = False):
     return rows
 
 
+def fused_bench(fast: bool = False):
+    """Fused SSA layer step on the spikingformer-shaped workloads: the
+    kernel's executed-step counts -> measured Fig. 5 schedule. All three
+    configs run even under ``--fast`` — the counts are what CI gates,
+    and the token config is the one whose measured hidden fraction
+    demonstrates the overlap (the sweep is three kernel calls, cheap
+    even in interpret mode)."""
+    del fast
+    from repro.core import dual_engine as de
+    from repro.core.spiking import SpikingConfig
+    from repro.kernels.fused_ssa import fused_ssa, reference_bundle
+
+    scfg = SpikingConfig()
+    delta = 0.3
+    rows = []
+    for name, fam, t, b, l, d, heads, hd, causal in FUSED_CONFIGS:
+        q_dim = heads * hd
+        # deterministic across processes (str hash() is salted)
+        key = jax.random.PRNGKey(t + b + l + d + sum(map(ord, name)))
+        kx, kw, ka = jax.random.split(key, 3)
+        x = (jax.random.uniform(kx, (t, b, l, d)) < FUSED_DENSITY
+             ).astype(jnp.float32)
+        # silent warm-up: LIF membranes start discharged, so the first
+        # timestep of a sequence often fires nothing — model it with one
+        # all-dark (t=0, b=0) slab the occupancy skip can measurably elide
+        x = x.at[0, 0].set(0.0)
+        w3 = jax.random.normal(kw, (3, d, q_dim), jnp.float32) * d ** -0.5
+        if fam == "bn":
+            sc, bi = jax.random.split(ka)
+            aux = jnp.stack([
+                jnp.zeros((q_dim,)), jnp.ones((q_dim,)),
+                1.0 + 0.1 * jax.random.normal(sc, (q_dim,)),
+                0.1 * jax.random.normal(bi, (q_dim,))])
+            aux = jnp.broadcast_to(aux, (3, 4, q_dim))
+        else:  # rope: cos/sin table for positions 0..L-1 (theta 1e4)
+            half = hd // 2
+            freqs = 10000.0 ** (-jnp.arange(0, half, dtype=jnp.float32)
+                                / half)
+            ang = jnp.arange(l, dtype=jnp.float32)[:, None] * freqs
+            aux = jnp.stack([jnp.cos(ang), jnp.sin(ang)])
+        kw_args = dict(family=fam, num_heads=heads, head_dim=hd,
+                       scale=hd ** -0.5, causal=causal)
+
+        def fused_call(x, w3=w3, aux=aux, kw_args=kw_args):
+            return fused_ssa(x, w3, None, aux, delta, **kw_args)[0]
+
+        def seq_call(x, w3=w3, aux=aux, kw_args=kw_args):
+            return reference_bundle(x, w3, None, aux, delta, scfg,
+                                    **kw_args)
+        fused_us = _time(jax.jit(fused_call), x)
+        seq_us = _time(jax.jit(seq_call), x)
+        _, counts = fused_ssa(x, w3, None, aux, delta, **kw_args)
+        m = de.fused_step_metrics(counts, seq=l, k_dim=d, head_dim=hd,
+                                  t_steps=t, batch=b)
+        rows.append({
+            "bench": "fused", "config": name, "family": fam,
+            "shape": [t, b, l, d, heads, hd], "causal": causal,
+            "fused_us": round(fused_us, 1),
+            "sequential_us": round(seq_us, 1),
+            # interpret-mode emulation on CPU — informative, never gated
+            "wall_ratio": round(seq_us / fused_us, 3),
+            "hidden_fraction": round(m["hidden_fraction"], 4),
+            "sparse_util": round(m["sparse_util"], 4),
+            "binary_util": round(m["binary_util"], 4),
+            "executed_q": m["executed_q"], "executed_k": m["executed_k"],
+            "executed_v": m["executed_v"],
+            "executed_attn": m["executed_attn"],
+            "possible_steps": m["possible_steps"],
+            "executed_steps": m["executed_steps"],
+            "step_reduction": round(m["step_reduction"], 4),
+            "proj_skip_fraction": round(m["proj_skip_fraction"], 4),
+        })
+    return rows
+
+
 def bench(fast: bool = False):
     from repro.core import engine as E
     from repro.core.dual_engine import (measured_overlap_efficiency,
@@ -275,6 +374,7 @@ def bench(fast: bool = False):
                 })
     attn_rows = attention_bench(fast=fast)
     sp_rows = sparse_path_bench(fast=fast)
+    fu_rows = fused_bench(fast=fast)
     med = lambda xs: sorted(xs)[len(xs) // 2]
     sparse_med = med([r["sparse_us"] for r in rows])
     mxu_med = med([r["mxu_us"] for r in attn_rows])
@@ -312,20 +412,32 @@ def bench(fast: bool = False):
             "hidden_fraction": round(
                 measured_overlap_efficiency(sparse_med, mxu_med), 4),
         },
+        # fused layer step: hidden fraction measured from the kernel's
+        # own executed-step counts (per-row detail in fused_rows)
+        "fused_overlap": {
+            "points": len(fu_rows),
+            "max_hidden_fraction": max(
+                r["hidden_fraction"] for r in fu_rows),
+            "best_config": max(fu_rows,
+                               key=lambda r: r["hidden_fraction"])
+            ["config"],
+        },
     }
-    return rows + attn_rows + sp_rows, derived
+    return rows + attn_rows + sp_rows + fu_rows, derived
 
 
 def to_blob(rows, derived):
     """Split the tagged row list into the artifact layout
     ({'rows': linear, 'attention_rows': attention, 'sparse_path_rows':
-    tile-vs-decoded, 'derived': ...})."""
+    tile-vs-decoded, 'fused_rows': fused layer step, 'derived': ...})."""
     return {"rows": [r for r in rows
-                     if r.get("bench") not in ("attention", "sparse_path")],
+                     if r.get("bench") not in ("attention", "sparse_path",
+                                               "fused")],
             "attention_rows": [r for r in rows
                                if r.get("bench") == "attention"],
             "sparse_path_rows": [r for r in rows
                                  if r.get("bench") == "sparse_path"],
+            "fused_rows": [r for r in rows if r.get("bench") == "fused"],
             "derived": derived}
 
 
@@ -359,6 +471,14 @@ def main():
               f"{r['tile_skip_fraction']},{r['decoded_mac_reduction']},"
               f"{r['decoded_modeled_speedup']},{r['sched_agreement']},"
               f"{r['auto_choice']}")
+    print("config,shape,hidden_fraction,sparse_util,binary_util,"
+          "step_reduction,proj_skip_fraction,fused_us,sequential_us")
+    for r in blob["fused_rows"]:
+        print(f"{r['config']},{'x'.join(map(str, r['shape']))},"
+              f"{r['hidden_fraction']},{r['sparse_util']},"
+              f"{r['binary_util']},{r['step_reduction']},"
+              f"{r['proj_skip_fraction']},{r['fused_us']},"
+              f"{r['sequential_us']}")
     print(json.dumps(derived))
 
 

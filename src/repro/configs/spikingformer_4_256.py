@@ -21,7 +21,7 @@ CONFIG = ModelConfig(
     # eager (non-jit) sparse calls pick the gather-compacted decoded
     # datapath from the occupancy histogram when the spikes are ragged
     # rather than tile-coherent (DESIGN.md §9).
-    engine=EngineConfig(mode="auto", sparse="auto"),
+    engine=EngineConfig(mode="auto", sparse="auto", overlap="auto"),
 )
 
 SMOKE = CONFIG.replace(

@@ -6,7 +6,9 @@ from .spiking import (SpikingConfig, spike, binarize, lif_scan, lif_step,
 from .attention import binary_attention_scores, spiking_attention
 from .dual_engine import (EngineParallelism, AttentionWorkload,
                           required_binary_parallelism, pipeline_schedule,
-                          pipeline_efficiency, complexity_reduction)
+                          pipeline_efficiency, complexity_reduction,
+                          measured_schedule, measured_overlap_efficiency,
+                          schedule_metrics, fused_step_metrics)
 from . import bitpack, sparsity
 
 __all__ = [
@@ -15,5 +17,7 @@ __all__ = [
     "binary_attention_scores", "spiking_attention",
     "EngineParallelism", "AttentionWorkload", "required_binary_parallelism",
     "pipeline_schedule", "pipeline_efficiency", "complexity_reduction",
+    "measured_schedule", "measured_overlap_efficiency",
+    "schedule_metrics", "fused_step_metrics",
     "bitpack", "sparsity",
 ]

@@ -27,7 +27,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .engine import EngineConfig, get_engine, resolve_binary_mode
+from .engine import (EngineConfig, annotate, get_engine,
+                     resolve_binary_mode)
 from .spiking import SpikingConfig, binarize
 
 
@@ -79,21 +80,23 @@ def spiking_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     if mode != "jnp":
         from repro.kernels import ops as kops  # lazy: keeps core importable
         fold = lambda u: u.reshape(bh, l, d)
-        out = kops.binary_attention(
-            fold(q), fold(k), fold(v), scale=float(scale),
-            delta=delta_score, causal=causal,
-            binarize_scores=cfg.binarize_scores,
-            alpha=cfg.surrogate_alpha,
-            use_popcount=(mode == "popcount"),
-            block_q=engine.attn_block_q, block_k=engine.attn_block_k)
+        with annotate(f"binary_engine.{mode}"):
+            out = kops.binary_attention(
+                fold(q), fold(k), fold(v), scale=float(scale),
+                delta=delta_score, causal=causal,
+                binarize_scores=cfg.binarize_scores,
+                alpha=cfg.surrogate_alpha,
+                use_popcount=(mode == "popcount"),
+                block_q=engine.attn_block_q, block_k=engine.attn_block_k)
         return out.reshape(q.shape)
-    scores = binary_attention_scores(q, k) * scale
-    if cfg.binarize_scores:
-        attn = binarize(scores, delta_score, cfg.surrogate_alpha)
-    else:
-        attn = scores
-    if causal:
-        mask = jnp.tril(jnp.ones((l, l), bool))
-        attn = jnp.where(mask, attn, 0.0)
-    return jnp.einsum("...qk,...kd->...qd", attn, v,
-                      preferred_element_type=jnp.float32).astype(q.dtype)
+    with annotate("binary_engine.jnp"):
+        scores = binary_attention_scores(q, k) * scale
+        if cfg.binarize_scores:
+            attn = binarize(scores, delta_score, cfg.surrogate_alpha)
+        else:
+            attn = scores
+        if causal:
+            mask = jnp.tril(jnp.ones((l, l), bool))
+            attn = jnp.where(mask, attn, 0.0)
+        return jnp.einsum("...qk,...kd->...qd", attn, v,
+                          preferred_element_type=jnp.float32).astype(q.dtype)

@@ -1,12 +1,21 @@
-"""Dual-engine latency-hiding pipeline model (paper Section III-C, Eq. 3/4).
+"""Dual-engine latency-hiding pipeline schedule (paper Section III-C,
+Eq. 3/4) — analytic model *and* measurement consumer.
 
 FireFly-T overlaps the sparse engine (Q/K/V projections) with the binary
-engine (QK^T, QK^T V) across attention heads. This module is the analytic +
-discrete-event model of that schedule; it is used by:
+engine (QK^T, QK^T V) across attention heads. This module holds the
+discrete-event model of that schedule (Fig. 5) and, since the fused
+dual-engine kernel landed (``kernels/fused_ssa.py``), the consumer that
+turns the kernel's *measured* per-phase executed-step counts into a
+hidden-fraction / utilization report (:func:`fused_step_metrics`). It is
+used by:
 
-* ``repro.sim.perf_model``    — Table IV throughput/energy reproduction,
-* ``benchmarks/fig5_pipeline``— the spatial-temporal overlap diagram,
-* the engine-sizing rule Eq. 4 used to pick ``P_B*`` for a network.
+* ``benchmarks/paper_figures.py``        — the Fig. 5 spatial-temporal
+  overlap diagram (``pipeline_schedule``),
+* ``benchmarks/dual_engine_bench.py``    — the measured-overlap rows
+  (``measured_schedule`` on wall-clock medians; ``fused_step_metrics``
+  on the fused kernel's step counts),
+* ``examples/dual_engine_walkthrough.py``— the Eq. 4 engine-sizing rule
+  (``required_binary_parallelism``) used to pick ``P_B*`` for a network.
 
 On TPU the same overlap re-appears as HBM-prefetch ∥ MXU pipelining inside
 the fused attention kernel and as compute/collective overlap at the
@@ -16,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Tuple
+from typing import Dict, List, Sequence, Tuple, Union
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,35 +77,72 @@ def required_binary_parallelism(w: AttentionWorkload, p: EngineParallelism) -> f
     return 2.0 / 3.0 * (w.L / w.C_i) * p.P_s
 
 
-def _event_schedule(ts: float, tb: float, heads: int
+# Per-head timing inputs: a scalar (every op identical — the original
+# two-scalar model), or a per-head sequence whose entries are scalars or
+# (Q, K, V) triples (sparse) / (QK^T, QK^TV) pairs (binary).
+PerHead = Union[float, Sequence]
+
+
+def _sparse_triples(ts: PerHead, heads: int) -> List[Tuple[float, ...]]:
+    if not isinstance(ts, Sequence):
+        return [(float(ts),) * 3] * heads
+    if len(ts) != heads:
+        raise ValueError(f"per-head sparse timings: got {len(ts)} entries "
+                         f"for {heads} heads")
+    return [(float(e),) * 3 if not isinstance(e, Sequence)
+            else tuple(float(x) for x in e) for e in ts]
+
+
+def _binary_pairs(tb: PerHead, heads: int) -> List[Tuple[float, ...]]:
+    if not isinstance(tb, Sequence):
+        return [(float(tb),) * 2] * heads
+    if len(tb) != heads:
+        raise ValueError(f"per-head binary timings: got {len(tb)} entries "
+                         f"for {heads} heads")
+    return [(float(e),) * 2 if not isinstance(e, Sequence)
+            else tuple(float(x) for x in e) for e in tb]
+
+
+def _event_schedule(ts: PerHead, tb: PerHead, heads: int
                     ) -> Tuple[List[tuple], List[tuple], float, float]:
     """Core event loop shared by the analytic and measured schedules:
     the sparse engine serially computes Q_h, K_h, V_h per head (``ts``
     each); the binary engine computes ``QK^T_h`` once Q_h,K_h are done
-    and ``QK^T V_h`` once V_h is done (``tb`` each)."""
+    and ``QK^T V_h`` once V_h is done (``tb`` each). ``ts``/``tb`` are
+    scalars or per-head sequences (see :data:`PerHead`); the scalar path
+    is numerically pinned to the original two-scalar model."""
+    trips = _sparse_triples(ts, heads)
+    pairs = _binary_pairs(tb, heads)
     sparse_events, binary_events = [], []
     t_sparse = 0.0
     qk_done = {}
     v_done = {}
     for h in range(heads):
-        for name in ("Q", "K", "V"):
-            sparse_events.append((f"{name}{h}", t_sparse, t_sparse + ts))
-            t_sparse += ts
+        for name, dt in zip(("Q", "K", "V"), trips[h]):
+            sparse_events.append((f"{name}{h}", t_sparse, t_sparse + dt))
+            t_sparse += dt
             if name == "K":
                 qk_done[h] = t_sparse
             if name == "V":
                 v_done[h] = t_sparse
     t_bin = 0.0
     for h in range(heads):
+        t_qk, t_qkv = pairs[h]
         start = max(t_bin, qk_done[h])
-        binary_events.append((f"QK^T {h}", start, start + tb))
-        t_bin = start + tb
+        binary_events.append((f"QK^T {h}", start, start + t_qk))
+        t_bin = start + t_qk
         start = max(t_bin, v_done[h])
-        binary_events.append((f"QK^TV {h}", start, start + tb))
-        t_bin = start + tb
+        binary_events.append((f"QK^TV {h}", start, start + t_qkv))
+        t_bin = start + t_qkv
 
     total_overlapped = max(t_sparse, t_bin if binary_events else 0.0)
-    total_serial = t_sparse + 2 * tb * heads
+    if not isinstance(tb, Sequence):
+        # the original scalar expression, verbatim (float-op-for-float-op:
+        # the scalar path is pinned numerically unchanged)
+        total_serial = t_sparse + 2 * float(tb) * heads
+    else:
+        total_serial = t_sparse + sum(t_qk + t_qkv
+                                      for t_qk, t_qkv in pairs)
     return sparse_events, binary_events, total_overlapped, total_serial
 
 
@@ -117,21 +163,29 @@ def pipeline_schedule(w: AttentionWorkload, p: EngineParallelism,
     return se, be, math.ceil(overlapped), math.ceil(serial)
 
 
-def measured_schedule(sparse_op_us: float, binary_op_us: float,
+def measured_schedule(sparse_op_us: PerHead, binary_op_us: PerHead,
                       heads: int = 8
                       ) -> Tuple[List[tuple], List[tuple], float, float]:
     """Fig. 5 schedule fed with *measured* engine timings instead of the
     analytic MAC model — e.g. the per-call medians
     ``benchmarks/dual_engine_bench.py`` writes to
     ``artifacts/dual_engine_bench.json`` (``sparse_us`` from the matmul
-    sweep, ``mxu_us`` from the attention sweep). Events are in the same
-    unit as the inputs (microseconds); returns (sparse_events,
-    binary_events, total_overlapped, total_serial).
+    sweep, ``mxu_us`` from the attention sweep). Each input is a scalar
+    (all heads/ops identical) or a per-head sequence — entries scalars or
+    (Q, K, V) triples / (QK^T, QK^TV) pairs, e.g. derived from the fused
+    kernel's per-phase executed-step counts. Events are in the same unit
+    as the inputs; returns (sparse_events, binary_events,
+    total_overlapped, total_serial).
     """
-    return _event_schedule(float(sparse_op_us), float(binary_op_us), heads)
+    if not isinstance(sparse_op_us, Sequence):
+        sparse_op_us = float(sparse_op_us)
+    if not isinstance(binary_op_us, Sequence):
+        binary_op_us = float(binary_op_us)
+    return _event_schedule(sparse_op_us, binary_op_us, heads)
 
 
-def measured_overlap_efficiency(sparse_op_us: float, binary_op_us: float,
+def measured_overlap_efficiency(sparse_op_us: PerHead,
+                                binary_op_us: PerHead,
                                 heads: int = 8) -> float:
     """Fraction of the serial dual-engine latency the overlap hides,
     from measured timings: 1 - overlapped/serial."""
@@ -140,6 +194,71 @@ def measured_overlap_efficiency(sparse_op_us: float, binary_op_us: float,
     if serial <= 0:
         return 0.0
     return 1.0 - overlapped / serial
+
+
+def schedule_metrics(sparse_op_us: PerHead, binary_op_us: PerHead,
+                     heads: int = 8) -> Dict[str, float]:
+    """Hidden fraction *and* per-engine utilization of the Fig. 5
+    schedule: utilization is each engine's busy time over the overlapped
+    makespan (1.0 = that engine never stalls; the paper sizes ``P_B*`` so
+    both stay near 1 — Eq. 4)."""
+    se, be, overlapped, serial = measured_schedule(sparse_op_us,
+                                                   binary_op_us, heads)
+    sparse_busy = sum(e - s for _, s, e in se)
+    binary_busy = sum(e - s for _, s, e in be)
+    return {
+        "overlapped": overlapped,
+        "serial": serial,
+        "hidden_fraction": 0.0 if serial <= 0 else 1.0 - overlapped / serial,
+        "sparse_util": 0.0 if overlapped <= 0 else sparse_busy / overlapped,
+        "binary_util": 0.0 if overlapped <= 0 else binary_busy / overlapped,
+    }
+
+
+def fused_step_metrics(counts, *, seq: int, k_dim: int, head_dim: int,
+                       t_steps: int, batch: int) -> Dict[str, float]:
+    """Measured overlap report from the fused kernel's executed-step
+    counts (``kernels/fused_ssa.fused_ssa``'s ``(H, 4)`` int32 output:
+    executed Q/K/V projection dots and attention dots per head).
+
+    This is the "measured, not modeled" hidden fraction: op durations in
+    the Fig. 5 schedule are the *executed* MACs of each phase — a
+    projection sub-step the kernel skipped (all-dark spike slab) simply
+    isn't there — with exact per-dot weights (projection dot = L*K*hd
+    MACs, attention dot = L*L*hd). Deterministic for a fixed input, so
+    CI gates it (benchmarks/check_regression.py).
+    """
+    rows = [[int(c) for c in row] for row in counts]
+    heads = len(rows)
+    w_proj = seq * k_dim * head_dim          # MACs per executed proj dot
+    w_attn = seq * seq * head_dim            # MACs per executed attn dot
+    sparse = [(r[0] * w_proj, r[1] * w_proj, r[2] * w_proj) for r in rows]
+    binary = [(r[3] // 2 * w_attn, (r[3] - r[3] // 2) * w_attn)
+              for r in rows]
+    m = schedule_metrics(sparse, binary, heads)
+    exec_q = sum(r[0] for r in rows)
+    exec_k = sum(r[1] for r in rows)
+    exec_v = sum(r[2] for r in rows)
+    exec_attn = sum(r[3] for r in rows)
+    possible_proj = 3 * t_steps * batch * heads
+    possible_attn = 2 * t_steps * batch * heads
+    executed = exec_q + exec_k + exec_v + exec_attn
+    possible = possible_proj + possible_attn
+    m.update({
+        "heads": heads,
+        "executed_q": exec_q, "executed_k": exec_k, "executed_v": exec_v,
+        "executed_attn": exec_attn,
+        "possible_steps": possible,
+        "executed_steps": executed,
+        # sequential baseline executes every sub-step back-to-back; the
+        # fused step both *skips* dark projection slabs and *hides*
+        # binary work behind sparse work — this is the skip half:
+        "step_reduction": 0.0 if possible == 0
+        else 1.0 - executed / possible,
+        "proj_skip_fraction": 0.0 if possible_proj == 0
+        else 1.0 - (exec_q + exec_k + exec_v) / possible_proj,
+    })
+    return m
 
 
 def pipeline_efficiency(w: AttentionWorkload, p: EngineParallelism,

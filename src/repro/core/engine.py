@@ -34,6 +34,13 @@ spiking_attention``, the transformer family's spiking SSA) consults
     AND-PopCount semantics and to quantify that the MXU form dominates
     on TPU (never chosen by ``auto``).
 
+Fused overlap — ``EngineConfig.overlap = off|fused|auto`` additionally
+lets a whole SSA layer step (:func:`ssa_step` / :func:`ssa_step_causal`:
+Q/K/V projections + epilogues + binary attention) run as *one* pipelined
+Pallas grid (``kernels/fused_ssa.py``) in which the two engines execute
+interleaved per head — the paper's Fig. 5 latency-hiding schedule made
+structural instead of sequential-composition-plus-arithmetic-model.
+
 Dispatch is *static* (shape/config driven, resolved at trace time): jit
 can't branch on runtime density, so ``auto`` mode uses the flop volume as
 the proxy — tiny matmuls / tiny attention can't amortize kernel staging
@@ -52,14 +59,16 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
+import math
 import threading
-from typing import Any, Dict, Optional
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 
 SPARSE_PATHS = ("tile", "decoded")
+OVERLAP_MODES = ("off", "fused")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +114,19 @@ class EngineConfig:
       AND-PopCount; layout is static per config, so this lives here and
       not in the ambient state.
 
+    overlap: 'off' | 'fused' | 'auto' — whether an SSA layer step runs as
+      the fused dual-engine bundle (kernels/fused_ssa.py: projection
+      tiles and AND-PopCount tiles interleaved per head on one grid, the
+      Fig. 5 overlap made structural) or as the sequential composition
+      (four linears, then attention). 'auto' fuses only when the bundle's
+      flop volume clears ``min_flops``, the input is concrete, and the
+      backend is interpretable (same static-dispatch discipline as
+      ``sparse``: under jit / on a real TPU auto resolves 'off'; an
+      explicit 'fused' is honored everywhere). The fused step is
+      eval-only (train-mode BN needs global batch stats) and falls back
+      to 'off' for layer shapes it does not cover (bias terms, mixed
+      quantization, GQA, qk_norm — see ssa_step/ssa_step_causal).
+
     weights: weight datapath dtype — 'fp32' (native params), 'int8', or
       'int4'. This is the *declared* serving datapath (launch/serve.py
       --quantize sets it and quantizes the params at load; repro.quant);
@@ -126,6 +148,7 @@ class EngineConfig:
     attn_block_q: int = 128
     attn_block_k: int = 128
     packed_kv: bool = True
+    overlap: str = "off"
     weights: str = "fp32"
     interpret: Optional[bool] = None
 
@@ -136,6 +159,9 @@ class EngineConfig:
         if self.sparse not in SPARSE_PATHS + ("auto",):
             raise ValueError(f"unknown sparse datapath {self.sparse!r} "
                              f"(expected tile|decoded|auto)")
+        if self.overlap not in OVERLAP_MODES + ("auto",):
+            raise ValueError(f"unknown overlap mode {self.overlap!r} "
+                             f"(expected off|fused|auto)")
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
@@ -180,6 +206,30 @@ def engine_scope(cfg) -> contextlib.AbstractContextManager:
     if engine is None:
         return contextlib.nullcontext()
     return use_engine(engine)
+
+
+def annotate(name: str) -> contextlib.AbstractContextManager:
+    """Profiler scope for an engine dispatch site (``jax.named_scope``):
+    every sparse-engine matmul, binary-engine attention, and fused
+    dual-engine step carries one, so the overlap is legible in a profile
+    dump (xprof / jax.profiler). Purely metadata — annotated and
+    unannotated traces are bitwise-identical (pinned by tests) — and
+    toggleable via :func:`disable_annotations` to prove exactly that.
+    """
+    if getattr(_state, "no_annotations", False):
+        return contextlib.nullcontext()
+    return jax.named_scope(name)
+
+
+@contextlib.contextmanager
+def disable_annotations():
+    """Run without profiler scopes (the bitwise smoke test's control arm)."""
+    prev = getattr(_state, "no_annotations", False)
+    _state.no_annotations = True
+    try:
+        yield
+    finally:
+        _state.no_annotations = prev
 
 
 def resolve_mode(engine: Optional[EngineConfig], m: int, k: int, n: int
@@ -241,6 +291,34 @@ def resolve_binary_mode(engine: Optional[EngineConfig], bh: int, l: int,
     if engine.binary != "auto":
         raise ValueError(f"unknown binary engine mode {engine.binary!r}")
     return "mxu_kernel" if 4 * bh * l * l * d >= engine.min_flops else "jnp"
+
+
+def resolve_overlap(engine: Optional[EngineConfig],
+                    x: Optional[jax.Array] = None,
+                    flops: int = 0) -> str:
+    """Fused-vs-sequential decision for an SSA layer step.
+
+    Same static-dispatch discipline as :func:`resolve_sparse_path`:
+    'auto' fuses only when the input is concrete (under jit — e.g. inside
+    the block scan — it is a tracer and auto resolves 'off'), off a real
+    TPU backend (the fused kernel is validated in interpret mode, not yet
+    against Mosaic lowering), and when the bundle's flop volume
+    (three projections + both attention matmuls) clears ``min_flops`` —
+    the fused grid stages whole Q/K/V spike trains through VMEM scratch,
+    which tiny smoke shapes can't amortize. An explicit 'fused' is
+    honored everywhere.
+    """
+    if engine is None:
+        return "off"
+    if engine.overlap in OVERLAP_MODES:
+        return engine.overlap
+    if engine.overlap != "auto":
+        raise ValueError(f"unknown overlap mode {engine.overlap!r}")
+    if x is None or isinstance(x, jax.core.Tracer):
+        return "off"
+    if jax.default_backend() == "tpu":
+        return "off"
+    return "fused" if flops >= engine.min_flops else "off"
 
 
 # ---------------------------------------------------------------------------
@@ -425,18 +503,224 @@ def spike_linear(p: Dict[str, Any], x: jax.Array, *,
     for d in x.shape[:-1]:
         m *= d
     if resolve_mode(engine, m, k, n) == "dense":
-        return dense_quant_linear(p, x) if quantized \
-            else dense_spike_linear(p, x)
+        with annotate("sparse_engine.dense"):
+            return dense_quant_linear(p, x) if quantized \
+                else dense_spike_linear(p, x)
     x2d = x.reshape(-1, k)
     path = resolve_sparse_path(engine, x2d)
-    if quantized:
-        out = _quant_sparse_matmul(
-            x2d.astype(jnp.float32), _unpacked_qw(p, k),
-            p["scale"].astype(jnp.float32), p.get("b"),
-            engine.block_m, engine.block_n, engine.block_k,
-            path, counts, engine.interpret)
-    else:
-        out = _sparse_matmul(x2d, p["w"], p.get("b"),
-                             engine.block_m, engine.block_n, engine.block_k,
-                             path, engine.interpret)
+    with annotate(f"sparse_engine.{path}"):
+        if quantized:
+            out = _quant_sparse_matmul(
+                x2d.astype(jnp.float32), _unpacked_qw(p, k),
+                p["scale"].astype(jnp.float32), p.get("b"),
+                engine.block_m, engine.block_n, engine.block_k,
+                path, counts, engine.interpret)
+        else:
+            out = _sparse_matmul(x2d, p["w"], p.get("b"),
+                                 engine.block_m, engine.block_n,
+                                 engine.block_k, path, engine.interpret)
     return out.reshape(*x.shape[:-1], n).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused dual-engine SSA step (overlap='fused'): one Pallas grid runs the
+# sparse engine (Q/K/V projections + epilogues) and the binary engine
+# (AND-PopCount attention) interleaved per head — kernels/fused_ssa.py,
+# the Fig. 5 schedule. Custom VJP recomputes the sequential oracle in bwd.
+# ---------------------------------------------------------------------------
+
+
+class _BundleSpec(NamedTuple):
+    """Static (hashable) closure of a fused SSA step — the nondiff arg of
+    the custom VJP, shared verbatim by the kernel fwd and the oracle bwd."""
+    family: str
+    num_heads: int
+    head_dim: int
+    scale: float
+    causal: bool
+    scfg: Any                   # SpikingConfig (frozen dataclass)
+    eps: float
+    interpret: Optional[bool]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _fused_bundle(x, w3, scale3, aux, delta, spec):
+    from repro.kernels.fused_ssa import fused_ssa  # lazy: no cycle
+    out, _ = fused_ssa(
+        x, w3, scale3, aux, delta, family=spec.family,
+        num_heads=spec.num_heads, head_dim=spec.head_dim, scale=spec.scale,
+        causal=spec.causal, binarize_scores=spec.scfg.binarize_scores,
+        decay=spec.scfg.decay, v_th=spec.scfg.v_threshold,
+        soft_reset=spec.scfg.soft_reset, eps=spec.eps,
+        interpret=spec.interpret)
+    return out
+
+
+def _fused_fwd(x, w3, scale3, aux, delta, spec):
+    return _fused_bundle(x, w3, scale3, aux, delta, spec), \
+        (x, w3, scale3, aux, delta)
+
+
+def _fused_bwd(spec, res, g):
+    """Recompute-through-the-oracle bwd: differentiating
+    ``kernels.fused_ssa.reference_bundle`` (the sequential composition the
+    kernel is pinned against bitwise) gives exactly the sequential path's
+    gradients — surrogate LIF/binarize jvps included. Quantized int codes
+    are cast to the activation dtype *before* this boundary, so their
+    cotangent stops at the convert just like the dense path's."""
+    from repro.kernels.fused_ssa import reference_bundle  # lazy: no cycle
+    x, w3, scale3, aux, delta = res
+
+    def f(x_, w3_, scale3_, aux_, delta_):
+        return reference_bundle(
+            x_, w3_, scale3_, aux_, delta_, spec.scfg, family=spec.family,
+            num_heads=spec.num_heads, head_dim=spec.head_dim,
+            scale=spec.scale, causal=spec.causal, eps=spec.eps)
+
+    _, vjp = jax.vjp(f, x, w3, scale3, aux, delta)
+    return vjp(g)
+
+
+_fused_bundle.defvjp(_fused_fwd, _fused_bwd)
+
+
+def ssa_step(p: Dict[str, Any], st: Dict[str, Any], cfg, s: jax.Array, *,
+             train: bool = False,
+             engine: Optional[EngineConfig] = None):
+    """The vision-family SSA bundle (bidirectional, BN epilogues):
+    projections Q/K/V (+ BatchNorm + LIF) and binary attention as one
+    engine-owned step. ``models/spikingformer._ssa`` hands the whole
+    bundle here instead of composing primitives itself.
+
+    p: {'wq','wk','wv','bn_q','bn_k','bn_v','delta', ...}; st: the BN
+    running-stats subtree; s: (T, B, L, D) {0,1} spikes (post input LIF);
+    cfg: ModelConfig. Returns (ctx (T, B, L, q_dim), new BN state).
+
+    ``overlap='fused'`` runs the pipelined dual-engine kernel when the
+    step is expressible there: eval only (train-mode BN needs global
+    batch statistics), bias-free projections, all-or-none quantization.
+    Otherwise — and always for ``overlap='off'`` — the sequential
+    composition below, which is the bit-parity reference.
+    """
+    engine = engine if engine is not None else get_engine()
+    from repro.core.attention import spiking_attention  # lazy: no cycle
+    from repro.core.spiking import lif_scan
+    from repro.models import nn
+    t, b, l, d = s.shape
+    heads, hd = cfg.num_heads, cfg.head_dim
+    names = (("q", "wq"), ("k", "wk"), ("v", "wv"))
+    quant = ["qw" in p[w] for _, w in names]
+    flops = 6 * (t * b * l) * d * cfg.q_dim \
+        + 4 * (t * b * heads) * l * l * hd
+    eligible = (not train
+                and (all(quant) or not any(quant))
+                and not any("b" in p[w] for _, w in names))
+    if eligible and resolve_overlap(engine, s, flops) == "fused":
+        if all(quant):
+            w3 = jnp.stack([_unpacked_qw(p[w], d) for _, w in names]
+                           ).astype(s.dtype)
+            scale3 = jnp.stack([p[w]["scale"].astype(jnp.float32)
+                                for _, w in names])
+        else:
+            w3 = jnp.stack([p[w]["w"] for _, w in names])
+            scale3 = None
+        aux = jnp.stack([
+            jnp.stack([st[f"bn_{n}"]["mean"].astype(jnp.float32),
+                       st[f"bn_{n}"]["var"].astype(jnp.float32),
+                       p[f"bn_{n}"]["scale"].astype(jnp.float32),
+                       p[f"bn_{n}"]["bias"].astype(jnp.float32)])
+            for n, _ in names])
+        spec = _BundleSpec("bn", heads, hd, 1.0 / math.sqrt(hd), False,
+                           cfg.spiking, 1e-5, engine.interpret)
+        with annotate("dual_engine.fused_ssa"):
+            ctx = _fused_bundle(s, w3, scale3, aux, p["delta"], spec)
+        return ctx, dict(st)
+    # sequential composition (what models/spikingformer._ssa used to
+    # inline) — the reference the fused path is pinned against bitwise
+    new_st = dict(st)
+
+    def proj(name, w):
+        cur = nn.linear(p[w], s, spikes=True)
+        y, bn_st = nn.batchnorm(p[f"bn_{name}"], st[f"bn_{name}"],
+                                cur.reshape(-1, cur.shape[-1]), train=train)
+        new_st[f"bn_{name}"] = bn_st
+        sp, _ = lif_scan(y.reshape(cur.shape), cfg.spiking)
+        return sp
+
+    q_s = proj("q", "wq")
+    k_s = proj("k", "wk")
+    v_s = proj("v", "wv")
+    # (T,B,L,q_dim) -> (T*B, H, L, hd) for the binary-attention primitive
+    fold = lambda u: u.reshape(t * b, l, heads, hd).transpose(0, 2, 1, 3)
+    ctx = spiking_attention(fold(q_s), fold(k_s), fold(v_s), cfg.spiking,
+                            delta_score=p["delta"])
+    return ctx.transpose(0, 2, 1, 3).reshape(t, b, l, cfg.q_dim), new_st
+
+
+def ssa_step_causal(p: Dict[str, Any], cfg, h: jax.Array, positions, *,
+                    train: bool = False,
+                    engine: Optional[EngineConfig] = None) -> jax.Array:
+    """The token-family SSA bundle (causal, RoPE epilogues): Q/K/V
+    projections (+ RoPE + LIF) and causal binary attention as one
+    engine-owned step — the spiking full-attention branch of
+    ``models/transformer.apply_layer`` hands the bundle here (the
+    sliding-window branch keeps its banded jnp dataflow).
+
+    h: (T, B, S, D) normed membrane currents (post ln1); positions: (S,).
+    Returns attn (T, B, S, q_dim) — pre-wo context.
+
+    Fused eligibility beyond the vision family's: no qk_norm, no GQA
+    (num_kv_heads == num_heads — the fused grid is one head per step),
+    shared 1-D positions, even head_dim (RoPE halves), and fp32
+    activations unless quantized (the sequential path's plain ``nn.
+    linear`` accumulates in the activation dtype; the kernel accumulates
+    fp32, which only coincides bitwise when they agree).
+    """
+    engine = engine if engine is not None else get_engine()
+    from repro.core.attention import spiking_attention  # lazy: no cycle
+    from repro.core.spiking import lif_scan
+    t, b, s_len, d = h.shape
+    heads, hd = cfg.num_heads, cfg.head_dim
+    names = ("wq", "wk", "wv")
+    quant = ["qw" in p[w] for w in names]
+    flops = 6 * (t * b * s_len) * d * cfg.q_dim \
+        + 4 * (t * b * heads) * s_len * s_len * hd
+    positions = jnp.asarray(positions)
+    eligible = (not cfg.qk_norm
+                and cfg.num_kv_heads == cfg.num_heads
+                and (all(quant) or not any(quant))
+                and not any("b" in p[w] for w in names)
+                and (all(quant) or h.dtype == jnp.float32)
+                and hd % 2 == 0
+                and positions.ndim == 1)
+    if eligible and resolve_overlap(engine, h, flops) == "fused":
+        if all(quant):
+            w3 = jnp.stack([_unpacked_qw(p[w], d) for w in names]
+                           ).astype(h.dtype)
+            scale3 = jnp.stack([p[w]["scale"].astype(jnp.float32)
+                                for w in names])
+        else:
+            w3 = jnp.stack([p[w]["w"] for w in names])
+            scale3 = None
+        half = hd // 2
+        # nn.rope's table, verbatim (same f32 expression -> same values)
+        freqs = cfg.rope_theta ** (
+            -jnp.arange(0, half, dtype=jnp.float32) / half)
+        ang = positions.astype(jnp.float32)[:, None] * freqs
+        aux = jnp.stack([jnp.cos(ang), jnp.sin(ang)])
+        spec = _BundleSpec("rope", heads, hd, 1.0 / math.sqrt(hd), True,
+                           cfg.spiking, 1e-5, engine.interpret)
+        with annotate("dual_engine.fused_ssa"):
+            ctx = _fused_bundle(h, w3, scale3, aux, p["delta"], spec)
+        return ctx
+    # sequential composition (what models/transformer.apply_layer used to
+    # inline for the spiking full-attention branch)
+    from repro.models.transformer import _project_qkv  # lazy: no cycle
+    q, k, v = _project_qkv(p, cfg, h, positions, repeat_kv=True)
+    q, k, v = (lif_scan(u, cfg.spiking)[0] for u in (q, k, v))
+    fold = lambda u: u.reshape(-1, *u.shape[2:])     # (T*B, S, H, hd)
+    swap = lambda u: u.transpose(0, 2, 1, 3)
+    ctx = spiking_attention(swap(fold(q)), swap(fold(k)), swap(fold(v)),
+                            cfg.spiking, delta_score=p["delta"],
+                            causal=True)
+    return swap(ctx).reshape(t, b, s_len, cfg.q_dim)

@@ -161,30 +161,21 @@ def _sps(params, state, cfg: ModelConfig, images, train: bool):
 
 
 def _ssa(p, st, cfg: ModelConfig, x, train: bool):
-    """Spiking self-attention with binary attention. x: (T,B,L,D) currents."""
+    """Spiking self-attention with binary attention. x: (T,B,L,D) currents.
+
+    The projection+attention bundle (Q/K/V linears + BN + LIF + binary
+    attention) is owned by the engine (core.engine.ssa_step): with
+    ``overlap='fused'`` both overlay halves run as one pipelined Pallas
+    grid (Fig. 5), otherwise the engine composes the sequential
+    reference. The model keeps only what stays outside the bundle: the
+    input neuron and the output projection wo + bn_o.
+    """
     t, b, l, d = x.shape
     s = _lif(x, cfg)
-    new_st = dict(st)
-
-    def proj(name, w):
-        cur = nn.linear(p[w], s, spikes=True)
-        y, bn_st = nn.batchnorm(p[f"bn_{name}"], st[f"bn_{name}"],
-                                cur.reshape(-1, cur.shape[-1]), train=train)
-        new_st[f"bn_{name}"] = bn_st
-        return _lif(y.reshape(cur.shape), cfg)
-
-    q_s = proj("q", "wq").reshape(t, b, l, cfg.num_heads, cfg.head_dim)
-    k_s = proj("k", "wk").reshape(t, b, l, cfg.num_heads, cfg.head_dim)
-    v_s = proj("v", "wv").reshape(t, b, l, cfg.num_heads, cfg.head_dim)
-    # (T,B,L,H,hd) -> (T*B, H, L, hd) for the binary-attention primitive;
-    # engine selection (jnp / MXU kernel / popcount) is ambient — the step
-    # builders install ModelConfig.engine, the model stays plumbing-free.
-    fold = lambda u: u.reshape(t * b, l, cfg.num_heads,
-                               cfg.head_dim).transpose(0, 2, 1, 3)
-    from repro.core.attention import spiking_attention
-    ctx = spiking_attention(fold(q_s), fold(k_s), fold(v_s), cfg.spiking,
-                            delta_score=p["delta"])
-    ctx = ctx.transpose(0, 2, 1, 3).reshape(t, b, l, cfg.q_dim)
+    from repro.core.engine import ssa_step
+    ctx, new_st = ssa_step(p, {n: st[n] for n in ("bn_q", "bn_k", "bn_v")},
+                           cfg, s, train=train)
+    new_st = dict(st, **new_st)
     # ctx is binarized-attention output: sparse integer counts, not {0,1}
     # spikes — but zero blocks are zero blocks, so the sparse engine skips
     # them all the same (every spiking matmul is sparsity-aware).

@@ -151,15 +151,25 @@ def apply_layer(p, cfg: ModelConfig, x, positions, kind: str, train: bool):
     """x: (B, S, D) or (T, B, S, D) in spiking mode."""
     spiking = cfg.spiking is not None
     h = nn.rmsnorm(p["ln1"], x, cfg.norm_eps)
-    q, k, v = _project_qkv(p, cfg, h, positions, repeat_kv=True)
-    if spiking:
+    if spiking and kind == "full":
+        # the whole projection+attention bundle is engine-owned: with
+        # overlap='fused' both overlay halves run as one pipelined
+        # Pallas grid (Fig. 5), otherwise the engine composes the
+        # sequential reference (projections + RoPE + LIF + causal
+        # binary attention). The sliding-window branch below keeps its
+        # banded jnp dataflow (the fused grid is full-attention only).
+        from repro.core.engine import ssa_step_causal
+        attn = ssa_step_causal(p, cfg, h, positions, train=train)
+    elif spiking:
         t = x.shape[0]
+        q, k, v = _project_qkv(p, cfg, h, positions, repeat_kv=True)
         q, k, v = (_spike(u, cfg, t) for u in (q, k, v))
         fold = lambda u: u.reshape(-1, *u.shape[2:])
         attn = _attend_full_seq(cfg, kind, fold(q), fold(k), fold(v),
                                 delta=p["delta"])
         attn = attn.reshape(*x.shape[:-1], cfg.q_dim)
     else:
+        q, k, v = _project_qkv(p, cfg, h, positions, repeat_kv=True)
         attn = _attend_full_seq(cfg, kind, q, k, v)
         attn = attn.reshape(*x.shape[:-1], cfg.q_dim)
     # q_dim stays 'model'-sharded into the row-parallel wo (§Perf F2 —
