@@ -21,7 +21,14 @@ change with
 Comparison rules: every baseline metric must exist in the fresh artifact
 and sit within tolerance (a vanished metric IS drift); fresh metrics
 absent from the baseline are ignored, so local full (non ``--smoke``)
-runs — a superset of the smoke sweep — still pass. To keep that superset
+runs — a superset of the smoke sweep — still pass. Two extra guards:
+baseline key families outside the artifact's ``KNOWN_PREFIXES``
+registry fail loud as *stale baselines* (the bench stopped emitting
+that family — one targeted failure naming it, not a generic "vanished"
+line per key), and ``FLOORS`` are absolute acceptance thresholds
+checked against the fresh artifact itself — they hold even at
+``--update-baselines`` time, so a regeneration can never ratify a
+below-floor value. To keep that superset
 property, only *sweep-independent* metrics are gated: per-row keys (a
 full sweep adds rows, never changes a smoke row) and whole-config
 quantities (footprint compression, PTQ logit MAE, wave reduction) —
@@ -69,7 +76,7 @@ def extract_dual_engine(blob):
         out[key + "/sched_agreement"] = (r["sched_agreement"], (ABS, 0.15))
         out[key + "/auto_choice"] = (r["auto_choice"], (EXACT,))
     for r in blob.get("fused_rows", []):
-        # fused layer step: everything here derives from the kernel's
+        # fused SSA bundle: everything here derives from the kernel's
         # executed-step counts on fixed-seed inputs — deterministic on
         # any backend. Executed counts are gated exactly; the schedule
         # ratios get a hair of float tolerance. Wall clock never gated.
@@ -81,6 +88,24 @@ def extract_dual_engine(blob):
         out[key + "/step_reduction"] = (r["step_reduction"], (ABS, 0.02))
         out[key + "/proj_skip_fraction"] = (
             r["proj_skip_fraction"], (ABS, 0.02))
+    for r in blob.get("layer_rows", []):
+        # layer-program step: occupancy-map (H, 8, n_l_blocks) counts
+        # gated exactly, schedule ratios with float tolerance, the sim
+        # twin's binary-phase prediction pinned sub-block-exact. The
+        # `off` rows are the sequential oracle baseline — wall clock
+        # only, never gated.
+        if r["overlap"] == "off":
+            continue
+        key = _row_key("layer", r, ("config", "overlap", "sparse"))
+        for ph in ("q", "k", "v", "qkt", "qktv", "wo", "up", "down"):
+            out[key + f"/executed_{ph}"] = (r[f"executed_{ph}"], (EXACT,))
+        for f in ("executed_steps", "possible_steps", "pipeline_iters",
+                  "sim_binary_exact"):
+            out[key + f"/{f}"] = (r[f], (EXACT,))
+        for f in ("hidden_fraction", "qkt_hidden_fraction",
+                  "qktv_hidden_fraction", "step_reduction",
+                  "sim_binary_agreement"):
+            out[key + f"/{f}"] = (r[f], (ABS, 0.02))
     # derived aggregates (max/mean over the sweep, auto-win counts) are
     # deliberately NOT gated: they change with the sweep size, so a full
     # run would spuriously drift vs a smoke baseline — the per-row keys
@@ -120,6 +145,31 @@ SPECS = {
     "dual_engine_bench.json": extract_dual_engine,
     "quant_bench.json": extract_quant,
     "serve_bench.json": extract_serve,
+}
+
+# every key family (first path segment) an extractor can emit. A
+# committed baseline key outside its artifact's registry means the
+# bench stopped emitting that family entirely (renamed or removed):
+# fail loud with the family named, instead of one generic "vanished"
+# line per key, so the fix (regenerate baselines or restore the bench)
+# is obvious.
+KNOWN_PREFIXES = {
+    "dual_engine_bench.json": ("linear", "sparse_path", "fused", "layer"),
+    "quant_bench.json": ("footprint", "derived"),
+    "serve_bench.json": ("derived",),
+}
+
+# acceptance floors checked against the *fresh* artifact (and at
+# --update-baselines time), independent of the committed baseline — a
+# baseline regeneration must never ratify a value below the floor. The
+# layer floor pins the PR's claim: the whole-layer program's measured
+# binary-hidden fraction on the token config strictly exceeds the
+# SSA-only bundle's 0.3971 (fused_rows, spikingformer-lm).
+FLOORS = {
+    "dual_engine_bench.json": (
+        ("layer/spikingformer-lm/fused/tile/hidden_fraction", 0.3971),
+        ("layer/spikingformer-lm/pipeline/tile/hidden_fraction", 0.3971),
+    ),
 }
 
 
@@ -164,7 +214,19 @@ def check(artifacts_dir: str, baselines_dir: str, update: bool) -> int:
             continue
         fresh = {k: v for k, (v, _) in pairs.items()}
         tols = {k: t for k, (_, t) in pairs.items()}
+        floor_fails = []
+        for key, floor in FLOORS.get(name, ()):
+            if key not in fresh:
+                floor_fails.append(f"{name}:{key}: floor metric missing "
+                                   f"(must be strictly above {floor})")
+            elif not fresh[key] > floor:
+                floor_fails.append(f"{name}:{key}: {fresh[key]} is not "
+                                   f"strictly above the floor {floor}")
+        failures.extend(floor_fails)
+        checked += len(FLOORS.get(name, ()))
         if update:
+            if floor_fails:
+                continue      # never ratify a below-floor artifact
             os.makedirs(baselines_dir, exist_ok=True)
             with open(bpath, "w") as f:
                 json.dump(fresh, f, indent=1, sort_keys=True)
@@ -176,7 +238,18 @@ def check(artifacts_dir: str, baselines_dir: str, update: bool) -> int:
             continue
         with open(bpath) as f:
             base = json.load(f)
+        known = KNOWN_PREFIXES.get(name)
+        if known is not None:
+            for fam in sorted({k.split("/", 1)[0] for k in base}
+                              - set(known)):
+                n = sum(1 for k in base if k.split("/", 1)[0] == fam)
+                failures.append(
+                    f"{name}: stale baseline family '{fam}' ({n} keys) "
+                    f"— no bench emits this prefix anymore; regenerate "
+                    f"baselines (--update-baselines) and commit")
         for key, bval in sorted(base.items()):
+            if known is not None and key.split("/", 1)[0] not in known:
+                continue      # reported above as a stale family
             checked += 1
             if key not in fresh:
                 failures.append(f"{name}:{key}: metric vanished "

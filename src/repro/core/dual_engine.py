@@ -215,11 +215,171 @@ def schedule_metrics(sparse_op_us: PerHead, binary_op_us: PerHead,
     }
 
 
+LAYER_PHASE_NAMES = ("q", "k", "v", "qkt", "qktv", "wo", "up", "down")
+
+
+def _interval_overlap(binary_events: List[tuple],
+                      sparse_events: List[tuple]) -> float:
+    """Total binary busy time that lies under sparse busy time."""
+    total = 0.0
+    for _, b0, b1 in binary_events:
+        for _, s0, s1 in sparse_events:
+            lo, hi = max(b0, s0), min(b1, s1)
+            if hi > lo:
+                total += hi - lo
+    return total
+
+
+def layer_event_schedule(macs: Dict[str, List[float]], heads: int,
+                         iters: int = 1
+                         ) -> Tuple[List[tuple], List[tuple]]:
+    """Discrete-event schedule of the *layer program* (the fused-layer
+    grid of ``kernels/fused_layer.py``): the sparse engine walks the
+    phases in the kernel's phase-major grid order (q, k, v over all
+    heads, then wo, up, down), the binary engine runs qkt/qktv as their
+    operands land, and ``wo`` of head h stalls on ``qktv`` of head h
+    (the context dependency). ``macs[phase][h]`` is the executed-MAC
+    duration of that (phase, head) work item.
+
+    ``iters > 1`` models the pipeline grid's timestep wavefront: the
+    per-phase work splits evenly over ``iters`` chained iterations, so
+    iteration i+1's q/k/v tiles fill the sparse-engine stall windows
+    and overlap iteration i's binary tail — the reason the pipeline
+    mode's measured hidden fraction exceeds the fused grid's.
+
+    Returns (sparse_events, binary_events) as (name, start, end) lists.
+    """
+    se: List[tuple] = []
+    be: List[tuple] = []
+    t_s = 0.0
+    t_b = 0.0
+    frac = 1.0 / iters
+    for it in range(iters):
+        k_done: Dict[int, float] = {}
+        v_done: Dict[int, float] = {}
+        ctx_done: Dict[int, float] = {}
+        for ph in ("q", "k", "v"):
+            for h in range(heads):
+                dt = macs[ph][h] * frac
+                se.append((f"{ph}{h}@{it}", t_s, t_s + dt))
+                t_s += dt
+                if ph == "k":
+                    k_done[h] = t_s
+                elif ph == "v":
+                    v_done[h] = t_s
+        for h in range(heads):
+            dt = macs["qkt"][h] * frac
+            start = max(t_b, k_done[h])
+            be.append((f"qkt{h}@{it}", start, start + dt))
+            t_b = start + dt
+        for h in range(heads):
+            dt = macs["qktv"][h] * frac
+            start = max(t_b, v_done[h])
+            be.append((f"qktv{h}@{it}", start, start + dt))
+            t_b = start + dt
+            ctx_done[h] = t_b
+        for h in range(heads):
+            dt = macs["wo"][h] * frac
+            start = max(t_s, ctx_done[h])
+            se.append((f"wo{h}@{it}", start, start + dt))
+            t_s = start + dt
+        for ph in ("up", "down"):
+            for h in range(heads):
+                dt = macs[ph][h] * frac
+                se.append((f"{ph}{h}@{it}", t_s, t_s + dt))
+                t_s += dt
+    return se, be
+
+
+def _layer_step_metrics(counts, *, seq, k_dim, head_dim, t_steps, batch,
+                        d_model, d_ff, l_block, sparse, c_block,
+                        pipeline) -> Dict[str, float]:
+    """The occupancy-map consumer: per-(head, phase, L-block) executed
+    sub-block counts from the fused-layer kernel -> executed-MAC phase
+    durations -> layer event schedule -> *binary-hidden fraction* (the
+    share of binary-engine busy time that runs under sparse-engine busy
+    time). Unlike the SSA-only makespan ratio, this is the quantity the
+    layer program actually improves: the MLP tail (wo/up/down) gives the
+    sparse engine work to run *under* the binary tail, and the pipeline
+    grid additionally folds the next timestep's q/k/v into the wo stall
+    windows."""
+    cnt = [[[int(c) for c in lbrow] for lbrow in row] for row in counts]
+    heads = len(cnt)
+    nlb = len(cnt[0][0])
+    rows = [min(l_block, seq - lb * l_block) for lb in range(nlb)]
+    ffc = d_ff // heads
+    decoded = sparse == "decoded"
+    proj_k = c_block if decoded else k_dim
+    unit = {"q": proj_k * head_dim, "k": proj_k * head_dim,
+            "v": proj_k * head_dim,
+            "qkt": seq * head_dim, "qktv": seq * head_dim,
+            "wo": head_dim * d_model, "up": d_model * ffc,
+            "down": ffc * d_model}
+    macs = {ph: [float(sum(cnt[h][p][lb] * rows[lb]
+                           for lb in range(nlb)) * unit[ph])
+                 for h in range(heads)]
+            for p, ph in enumerate(LAYER_PHASE_NAMES)}
+    iters = t_steps if pipeline else 1
+    se, be = layer_event_schedule(macs, heads, iters)
+    sparse_busy = sum(e - s for _, s, e in se)
+    binary_busy = sum(e - s for _, s, e in be)
+    makespan = max([e for _, _, e in se + be], default=0.0)
+    hidden = _interval_overlap(be, se)
+    qkt_ev = [ev for ev in be if ev[0].startswith("qkt") and
+              not ev[0].startswith("qktv")]
+    qktv_ev = [ev for ev in be if ev[0].startswith("qktv")]
+    qkt_busy = sum(e - s for _, s, e in qkt_ev)
+    qktv_busy = sum(e - s for _, s, e in qktv_ev)
+    executed = {ph: sum(cnt[h][p][lb] for h in range(heads)
+                        for lb in range(nlb))
+                for p, ph in enumerate(LAYER_PHASE_NAMES)}
+    per_block = t_steps * batch * heads * nlb
+    possible = {ph: per_block for ph in LAYER_PHASE_NAMES}
+    if decoded:
+        nc = -(-k_dim // c_block)
+        for ph in ("q", "k", "v"):
+            possible[ph] = per_block * nc
+    tot_exec = sum(executed.values())
+    tot_poss = sum(possible.values())
+    return {
+        "heads": heads,
+        "phases": len(LAYER_PHASE_NAMES),
+        "l_blocks": nlb,
+        "pipeline_iters": iters,
+        "executed_steps": tot_exec,
+        "possible_steps": tot_poss,
+        "step_reduction": 0.0 if tot_poss == 0
+        else 1.0 - tot_exec / tot_poss,
+        "sparse_busy": sparse_busy,
+        "binary_busy": binary_busy,
+        "makespan": makespan,
+        "sparse_util": 0.0 if makespan <= 0 else sparse_busy / makespan,
+        "binary_util": 0.0 if makespan <= 0 else binary_busy / makespan,
+        # the binary-hidden fraction: binary busy time overlapped by
+        # sparse busy time, over binary busy time
+        "hidden_fraction": 0.0 if binary_busy <= 0
+        else hidden / binary_busy,
+        "qkt_hidden_fraction": 0.0 if qkt_busy <= 0
+        else _interval_overlap(qkt_ev, se) / qkt_busy,
+        "qktv_hidden_fraction": 0.0 if qktv_busy <= 0
+        else _interval_overlap(qktv_ev, se) / qktv_busy,
+        **{f"executed_{ph}": executed[ph] for ph in LAYER_PHASE_NAMES},
+    }
+
+
 def fused_step_metrics(counts, *, seq: int, k_dim: int, head_dim: int,
-                       t_steps: int, batch: int) -> Dict[str, float]:
+                       t_steps: int, batch: int, d_model: int = None,
+                       d_ff: int = None, l_block: int = None,
+                       sparse: str = "tile", c_block: int = None,
+                       pipeline: bool = False) -> Dict[str, float]:
     """Measured overlap report from the fused kernel's executed-step
-    counts (``kernels/fused_ssa.fused_ssa``'s ``(H, 4)`` int32 output:
-    executed Q/K/V projection dots and attention dots per head).
+    counts — either the SSA bundle's ``(H, 4)`` int32 counts
+    (``kernels/fused_ssa.fused_ssa``: executed Q/K/V projection dots and
+    attention dots per head) or the layer program's ``(H, 8, n_l_blocks)``
+    occupancy map (``kernels/fused_layer.fused_layer``: executed
+    sub-blocks per head, phase and L-block — dispatched on the counts'
+    rank; the layer path needs ``d_model``/``d_ff``/``l_block`` and, for
+    ``sparse='decoded'``, ``c_block``).
 
     This is the "measured, not modeled" hidden fraction: op durations in
     the Fig. 5 schedule are the *executed* MACs of each phase — a
@@ -228,6 +388,14 @@ def fused_step_metrics(counts, *, seq: int, k_dim: int, head_dim: int,
     MACs, attention dot = L*L*hd). Deterministic for a fixed input, so
     CI gates it (benchmarks/check_regression.py).
     """
+    ndim = counts.ndim if hasattr(counts, "ndim") else \
+        (3 if isinstance(counts[0][0], (list, tuple)) else 2)
+    if ndim == 3:
+        return _layer_step_metrics(
+            counts, seq=seq, k_dim=k_dim, head_dim=head_dim,
+            t_steps=t_steps, batch=batch, d_model=d_model, d_ff=d_ff,
+            l_block=l_block, sparse=sparse, c_block=c_block,
+            pipeline=pipeline)
     rows = [[int(c) for c in row] for row in counts]
     heads = len(rows)
     w_proj = seq * k_dim * head_dim          # MACs per executed proj dot

@@ -34,12 +34,20 @@ spiking_attention``, the transformer family's spiking SSA) consults
     AND-PopCount semantics and to quantify that the MXU form dominates
     on TPU (never chosen by ``auto``).
 
-Fused overlap — ``EngineConfig.overlap = off|fused|auto`` additionally
-lets a whole SSA layer step (:func:`ssa_step` / :func:`ssa_step_causal`:
-Q/K/V projections + epilogues + binary attention) run as *one* pipelined
-Pallas grid (``kernels/fused_ssa.py``) in which the two engines execute
-interleaved per head — the paper's Fig. 5 latency-hiding schedule made
-structural instead of sequential-composition-plus-arithmetic-model.
+Fused overlap — ``EngineConfig.overlap = off|fused|pipeline|auto`` lets
+an engine-owned step run as *one* Pallas grid in which the two engines
+execute interleaved per head — the paper's Fig. 5 latency-hiding
+schedule made structural instead of sequential-composition-plus-
+arithmetic-model. Two step surfaces exist: the SSA bundle
+(:func:`ssa_step` / :func:`ssa_step_causal` — Q/K/V projections +
+epilogues + binary attention, ``kernels/fused_ssa.py``) and the *layer
+program* (:func:`layer_step` / :func:`layer_step_causal` — the bundle
+plus output projection, residuals and the spiking MLP as one grid,
+``kernels/fused_layer.py``). The layer program's ``pipeline`` mode
+additionally walks the timestep axis as a grid dimension (the
+timestep/layer wavefront from ROADMAP), and :func:`resolve_layer_plan`
+folds the overlap mode and the sparse datapath into one static plan so
+``sparse='decoded'`` rides inside ``overlap='fused'|'pipeline'``.
 
 Dispatch is *static* (shape/config driven, resolved at trace time): jit
 can't branch on runtime density, so ``auto`` mode uses the flop volume as
@@ -68,7 +76,7 @@ import jax.numpy as jnp
 
 
 SPARSE_PATHS = ("tile", "decoded")
-OVERLAP_MODES = ("off", "fused")
+OVERLAP_MODES = ("off", "fused", "pipeline")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,18 +122,27 @@ class EngineConfig:
       AND-PopCount; layout is static per config, so this lives here and
       not in the ambient state.
 
-    overlap: 'off' | 'fused' | 'auto' — whether an SSA layer step runs as
-      the fused dual-engine bundle (kernels/fused_ssa.py: projection
-      tiles and AND-PopCount tiles interleaved per head on one grid, the
-      Fig. 5 overlap made structural) or as the sequential composition
-      (four linears, then attention). 'auto' fuses only when the bundle's
-      flop volume clears ``min_flops``, the input is concrete, and the
-      backend is interpretable (same static-dispatch discipline as
-      ``sparse``: under jit / on a real TPU auto resolves 'off'; an
-      explicit 'fused' is honored everywhere). The fused step is
-      eval-only (train-mode BN needs global batch stats) and falls back
-      to 'off' for layer shapes it does not cover (bias terms, mixed
-      quantization, GQA, qk_norm — see ssa_step/ssa_step_causal).
+    overlap: 'off' | 'fused' | 'pipeline' | 'auto' — whether an
+      engine-owned step runs as a fused dual-engine grid (projection
+      tiles and AND-PopCount tiles interleaved per head, the Fig. 5
+      overlap made structural) or as the sequential composition.
+      'fused' runs the whole-layer program (kernels/fused_layer.py) for
+      layer_step/layer_step_causal and the SSA bundle
+      (kernels/fused_ssa.py) for ssa_step/ssa_step_causal; 'pipeline'
+      is the layer program on its (B, T, P, H) wavefront grid — the
+      timestep axis becomes a grid dimension so MLP tiles of layer l
+      interleave with layer l+1's Q/K/V phases on a pipelined backend
+      (bundle-level steps treat it as 'fused': the bundle has no MLP
+      tail to pipeline). 'auto' fuses only when the step's flop volume
+      clears ``min_flops``, the input is concrete, and the backend is
+      interpretable (same static-dispatch discipline as ``sparse``:
+      under jit / on a real TPU auto resolves 'off'; explicit
+      'fused'/'pipeline' are honored everywhere — auto never volunteers
+      'pipeline'). The fused steps are eval-only (train-mode BN needs
+      global batch stats) and fall back to the sequential composition
+      for layer shapes they do not cover (bias terms, mixed
+      quantization, GQA, qk_norm, gated MLPs — see layer_step /
+      layer_step_causal / ssa_step / ssa_step_causal).
 
     weights: weight datapath dtype — 'fp32' (native params), 'int8', or
       'int4'. This is the *declared* serving datapath (launch/serve.py
@@ -161,7 +178,7 @@ class EngineConfig:
                              f"(expected tile|decoded|auto)")
         if self.overlap not in OVERLAP_MODES + ("auto",):
             raise ValueError(f"unknown overlap mode {self.overlap!r} "
-                             f"(expected off|fused|auto)")
+                             f"(expected off|fused|pipeline|auto)")
 
     def replace(self, **kw) -> "EngineConfig":
         return dataclasses.replace(self, **kw)
@@ -261,8 +278,8 @@ def resolve_sparse_path(engine: Optional[EngineConfig],
         return "tile"
     if engine.sparse in SPARSE_PATHS:
         return engine.sparse
-    if engine.sparse != "auto":
-        raise ValueError(f"unknown sparse datapath {engine.sparse!r}")
+    # EngineConfig.__post_init__ already rejected anything else
+    assert engine.sparse == "auto", engine.sparse
     if s2d is None or isinstance(s2d, jax.core.Tracer):
         return "tile"
     if jax.default_backend() == "tpu":
@@ -305,20 +322,50 @@ def resolve_overlap(engine: Optional[EngineConfig],
     against Mosaic lowering), and when the bundle's flop volume
     (three projections + both attention matmuls) clears ``min_flops`` —
     the fused grid stages whole Q/K/V spike trains through VMEM scratch,
-    which tiny smoke shapes can't amortize. An explicit 'fused' is
-    honored everywhere.
+    which tiny smoke shapes can't amortize. Explicit 'fused' and
+    'pipeline' are honored everywhere; 'auto' never volunteers
+    'pipeline' (the wavefront grid's payoff is a backend-scheduling
+    property, not something the flop proxy can see).
     """
     if engine is None:
         return "off"
     if engine.overlap in OVERLAP_MODES:
         return engine.overlap
-    if engine.overlap != "auto":
-        raise ValueError(f"unknown overlap mode {engine.overlap!r}")
+    # EngineConfig.__post_init__ already rejected anything else
+    assert engine.overlap == "auto", engine.overlap
     if x is None or isinstance(x, jax.core.Tracer):
         return "off"
     if jax.default_backend() == "tpu":
         return "off"
     return "fused" if flops >= engine.min_flops else "off"
+
+
+class LayerPlan(NamedTuple):
+    """The static execution plan of a whole-layer step: which overlap
+    grid (off | fused | pipeline) and which sparse projection datapath
+    (tile | decoded) the fused layer program composes."""
+    overlap: str
+    sparse: str
+
+
+def resolve_layer_plan(engine: Optional[EngineConfig],
+                       x: Optional[jax.Array] = None,
+                       flops: int = 0) -> LayerPlan:
+    """One static plan for a whole-layer step.
+
+    PR 6 resolved the overlap mode (:func:`resolve_overlap`, per bundle)
+    and the sparse datapath (:func:`resolve_sparse_path`, per matmul)
+    independently — the layer program needs them as *one* decision so
+    ``sparse='decoded'`` rides inside ``overlap='fused' | 'pipeline'``
+    (the decoded gather runs *inside* the fused kernel's projection
+    phases). Same static-dispatch discipline as both parents: under jit
+    ``x`` is a tracer, so 'auto' resolves (off, tile).
+    """
+    overlap = resolve_overlap(engine, x, flops)
+    x2d = None
+    if x is not None and not isinstance(x, jax.core.Tracer):
+        x2d = x.reshape(-1, x.shape[-1])
+    return LayerPlan(overlap, resolve_sparse_path(engine, x2d))
 
 
 # ---------------------------------------------------------------------------
@@ -615,7 +662,8 @@ def ssa_step(p: Dict[str, Any], st: Dict[str, Any], cfg, s: jax.Array, *,
     eligible = (not train
                 and (all(quant) or not any(quant))
                 and not any("b" in p[w] for _, w in names))
-    if eligible and resolve_overlap(engine, s, flops) == "fused":
+    if eligible and resolve_overlap(engine, s, flops) in ("fused",
+                                                          "pipeline"):
         if all(quant):
             w3 = jnp.stack([_unpacked_qw(p[w], d) for _, w in names]
                            ).astype(s.dtype)
@@ -693,7 +741,8 @@ def ssa_step_causal(p: Dict[str, Any], cfg, h: jax.Array, positions, *,
                 and (all(quant) or h.dtype == jnp.float32)
                 and hd % 2 == 0
                 and positions.ndim == 1)
-    if eligible and resolve_overlap(engine, h, flops) == "fused":
+    if eligible and resolve_overlap(engine, h, flops) in ("fused",
+                                                          "pipeline"):
         if all(quant):
             w3 = jnp.stack([_unpacked_qw(p[w], d) for w in names]
                            ).astype(h.dtype)
@@ -724,3 +773,340 @@ def ssa_step_causal(p: Dict[str, Any], cfg, h: jax.Array, positions, *,
                             cfg.spiking, delta_score=p["delta"],
                             causal=True)
     return swap(ctx).reshape(t, b, s_len, cfg.q_dim)
+
+
+# ---------------------------------------------------------------------------
+# fused whole-layer step (overlap='fused'|'pipeline'): the layer program —
+# SSA bundle + output projection + residuals + spiking MLP — runs as one
+# Pallas grid (kernels/fused_layer.py) with the decoded gather datapath
+# available inside the projection phases and a per-phase occupancy map for
+# the binary engine. Custom VJP recomputes the sequential oracle in bwd.
+# ---------------------------------------------------------------------------
+
+
+class _LayerSpec(NamedTuple):
+    """Static (hashable) closure of a layer-program step — the nondiff
+    arg of the custom VJP, shared verbatim by the fwd (kernel or oracle)
+    and the oracle bwd (the PR 6 ``_BundleSpec`` pattern, extended with
+    the layer plan)."""
+    family: str
+    num_heads: int
+    head_dim: int
+    scale: float
+    causal: bool
+    scfg: Any                   # SpikingConfig (frozen dataclass)
+    eps: float
+    norm_eps: float
+    overlap: str                # off | fused | pipeline
+    sparse: str                 # tile | decoded
+    l_block: int
+    c_block: int
+    interpret: Optional[bool]
+
+
+def _layer_kernel_args(ops, spec):
+    return ((ops["x"], ops["s"], ops["w3"], ops["wo"], ops["w1"],
+             ops["w2"], ops["scales"], ops["auxp"], ops["auxo"],
+             ops["aux1"], ops["aux2"], ops["delta"]),
+            dict(family=spec.family, num_heads=spec.num_heads,
+                 head_dim=spec.head_dim, scale=spec.scale,
+                 causal=spec.causal, eps=spec.eps,
+                 norm_eps=spec.norm_eps))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _fused_layer(ops, spec):
+    """Every *eligible* layer runs through this step — also with
+    ``overlap='off'``, where the fwd is the sequential oracle itself.
+    One function means one gradient program for all overlap modes (the
+    same bwd jaxpr below), which is what makes off/fused/pipeline
+    gradients bitwise-identical *by construction*: an inline-autodiff
+    bwd and a recompute bwd are different jaxprs computing the same
+    math, and XLA's FMA contraction resolves them differently at the
+    one-ulp level once the layer scan splits fwd and bwd into separate
+    compiled programs."""
+    if spec.overlap == "off":
+        from repro.kernels.fused_layer import reference_layer  # lazy
+        args, kw = _layer_kernel_args(ops, spec)
+        return reference_layer(*args, spec.scfg, **kw)
+    from repro.kernels.fused_layer import fused_layer  # lazy: no cycle
+    args, kw = _layer_kernel_args(ops, spec)
+    out, _ = fused_layer(
+        *args, sparse=spec.sparse, pipeline=spec.overlap == "pipeline",
+        binarize_scores=spec.scfg.binarize_scores, decay=spec.scfg.decay,
+        v_th=spec.scfg.v_threshold, soft_reset=spec.scfg.soft_reset,
+        l_block=spec.l_block, c_block=spec.c_block,
+        interpret=spec.interpret, **kw)
+    return out
+
+
+def _layer_fwd(ops, spec):
+    return _fused_layer(ops, spec), ops
+
+
+def _layer_bwd(spec, res, g):
+    """Recompute-through-the-oracle bwd (the PR 6 pattern): differentiate
+    ``kernels.fused_layer.reference_layer`` — the sequential layer
+    composition the kernel is pinned against bitwise — so the fused path
+    returns exactly the sequential path's gradients, surrogate LIF /
+    binarize jvps included. Quantized int codes are cast to the
+    activation dtype before this boundary; d_ff zero-padding happens
+    outside it, so pad cotangents slice back automatically."""
+    from repro.kernels.fused_layer import reference_layer  # lazy
+
+    def f(o):
+        args, kw = _layer_kernel_args(o, spec)
+        return reference_layer(*args, spec.scfg, **kw)
+
+    _, vjp = jax.vjp(f, res)
+    return vjp(g)
+
+
+_fused_layer.defvjp(_layer_fwd, _layer_bwd)
+
+
+def _layer_quant_w3(p, names, d, dtype):
+    """(stacked qkv weights, per-proj scales) for an all-quantized layer."""
+    w3 = jnp.stack([_unpacked_qw(p[w], d) for w in names]).astype(dtype)
+    scale3 = jnp.stack([p[w]["scale"].astype(jnp.float32) for w in names])
+    return w3, scale3
+
+
+def _layer_linear(p, k, dtype):
+    """(weight codes cast to activation dtype, fp32 scale-or-ones) for one
+    layer linear — quantized or native."""
+    if "qw" in p:
+        return _unpacked_qw(p, k).astype(dtype), \
+            p["scale"].astype(jnp.float32)
+    return p["w"], jnp.ones((p["w"].shape[-1],), jnp.float32)
+
+
+def _pad_ff(w1, w2, sc1, aux1, heads):
+    """Zero-pad d_ff to a multiple of ``num_heads`` (the fused grid hands
+    each head one ff-chunk). Exact: padded up-columns are zero, so the
+    padded channels carry zero current, normalize to zero through the
+    identity BN rows appended to aux1 ([mean 0, var 1, scale 1, bias 0]),
+    never cross the LIF threshold (v_th > 0), and meet zero down-rows."""
+    ff = w1.shape[1]
+    pad = (-ff) % heads
+    if pad == 0:
+        return w1, w2, sc1, aux1
+    w1 = jnp.pad(w1, ((0, 0), (0, pad)))
+    w2 = jnp.pad(w2, ((0, pad), (0, 0)))
+    sc1 = jnp.pad(sc1, (0, pad), constant_values=1.0)
+    if aux1 is not None:
+        ident = jnp.tile(jnp.asarray([0.0, 1.0, 1.0, 0.0],
+                                     jnp.float32)[:, None], (1, pad))
+        aux1 = jnp.concatenate([aux1, ident], axis=1)
+    return w1, w2, sc1, aux1
+
+
+def _bn_rows(p, st, name):
+    return jnp.stack([st[name]["mean"].astype(jnp.float32),
+                      st[name]["var"].astype(jnp.float32),
+                      p[name]["scale"].astype(jnp.float32),
+                      p[name]["bias"].astype(jnp.float32)])
+
+
+def layer_step(p: Dict[str, Any], st: Dict[str, Any], cfg, x: jax.Array,
+               *, train: bool = False,
+               engine: Optional[EngineConfig] = None):
+    """The vision-family *layer program*: input LIF + SSA bundle + output
+    projection (wo + bn_o) + pre-neuron residual + spiking MLP (w1 +
+    bn_1 + LIF + w2 + bn_2) + residual, as one engine-owned step.
+    ``models/spikingformer._block`` hands the whole encoder layer here.
+
+    p/st: the block param/state subtrees (_block_init/_block_state
+    layout); x: (T, B, L, D) membrane currents (the residual stream);
+    cfg: ModelConfig. Returns (y (T, B, L, D), new BN state).
+
+    With ``overlap='fused' | 'pipeline'`` (and an eligible layer) the
+    whole program runs as one Pallas grid — kernels/fused_layer.py, with
+    ``sparse='decoded'`` composing the gather-compacted projection
+    datapath into the fused phases (resolve_layer_plan). Eligibility
+    follows the PR 6 static-fallback discipline: eval only (train-mode
+    BN needs global batch stats), bias-free linears, all-or-none
+    quantization, binarized scores with analog context (the blocked
+    binary phases and the head-split wo contraction stay exact on
+    integer contexts). Eligible layers route through the shared
+    custom-VJP step for *every* overlap mode — ``overlap='off'`` runs
+    the sequential oracle as its fwd — so off/fused/pipeline agree
+    bitwise on gradients by construction (see ``_fused_layer``).
+    Ineligible layers (and train mode) run the plain sequential
+    composition below, which still hands the SSA bundle to
+    :func:`ssa_step`, so bundle-level fusion survives a layer-level
+    fallback.
+    """
+    engine = engine if engine is not None else get_engine()
+    from repro.core.spiking import lif_scan
+    from repro.models import nn
+    t, b, l, d = x.shape
+    heads, hd = cfg.num_heads, cfg.head_dim
+    lin_names = ("wq", "wk", "wv", "wo", "w1", "w2")
+    quant = ["qw" in p[w] for w in lin_names]
+    flops = 6 * (t * b * l) * d * cfg.q_dim \
+        + 4 * (t * b * heads) * l * l * hd \
+        + 2 * (t * b * l) * cfg.q_dim * d \
+        + 4 * (t * b * l) * d * cfg.d_ff
+    eligible = (not train
+                and (all(quant) or not any(quant))
+                and not any("b" in p[w] for w in lin_names)
+                and cfg.spiking.binarize_scores
+                and not cfg.spiking.binarize_context)
+    s = lif_scan(x, cfg.spiking)[0]
+    plan = resolve_layer_plan(engine, s, flops)
+    if eligible:
+        dtype = x.dtype
+        if all(quant):
+            w3, sc3 = _layer_quant_w3(p, ("wq", "wk", "wv"), d, dtype)
+        else:
+            w3 = jnp.stack([p[w]["w"] for w in ("wq", "wk", "wv")])
+            sc3 = jnp.ones((3, cfg.q_dim), jnp.float32)
+        wo, sco = _layer_linear(p["wo"], cfg.q_dim, dtype)
+        w1, sc1 = _layer_linear(p["w1"], d, dtype)
+        w2, sc2 = _layer_linear(p["w2"], cfg.d_ff, dtype)
+        aux1 = _bn_rows(p, st, "bn_1")
+        w1, w2, sc1, aux1 = _pad_ff(w1, w2, sc1, aux1, heads)
+        ops = {
+            "x": x, "s": s, "w3": w3, "wo": wo, "w1": w1, "w2": w2,
+            "scales": (sc3, sco, sc1, sc2),
+            "auxp": jnp.stack([_bn_rows(p, st, f"bn_{n}")
+                               for n in ("q", "k", "v")]),
+            "auxo": _bn_rows(p, st, "bn_o"),
+            "aux1": aux1, "aux2": _bn_rows(p, st, "bn_2"),
+            "delta": p["delta"],
+        }
+        spec = _LayerSpec("bn", heads, hd, 1.0 / math.sqrt(hd), False,
+                          cfg.spiking, 1e-5, 1e-6, plan.overlap,
+                          plan.sparse,
+                          engine.block_m if engine else 128,
+                          engine.block_k if engine else 128,
+                          engine.interpret if engine else None)
+        with annotate("dual_engine.fused_layer"):
+            y = _fused_layer(ops, spec)
+        return y, dict(st)
+    # sequential composition (what models/spikingformer._block used to
+    # inline) — the reference the fused path is pinned against bitwise.
+    # The bundle still routes through ssa_step: a layer-level fallback
+    # keeps bundle-level fusion.
+    ctx, new_st = ssa_step(p, {n: st[n] for n in ("bn_q", "bn_k", "bn_v")},
+                           cfg, s, train=train, engine=engine)
+    new_st = dict(st, **new_st)
+    # ctx is binarized-attention output: sparse integer counts, not {0,1}
+    # spikes — but zero blocks are zero blocks, so the sparse engine
+    # skips them all the same. counts=True: under quantized weights the
+    # counts (up to L) must ride int32 lanes, not the spikes' int8 path.
+    out = nn.linear(p["wo"], ctx, spikes=True, counts=True)
+    out, bn_st = nn.batchnorm(p["bn_o"], st["bn_o"],
+                              out.reshape(-1, d), train=train)
+    new_st["bn_o"] = bn_st
+    x = x + out.reshape(t, b, l, d)               # pre-neuron residual
+    s2 = lif_scan(x, cfg.spiking)[0]
+    h = nn.linear(p["w1"], s2, spikes=True)
+    h, bn1 = nn.batchnorm(p["bn_1"], st["bn_1"],
+                          h.reshape(-1, h.shape[-1]), train=train)
+    new_st["bn_1"] = bn1
+    h = lif_scan(h.reshape(t, b, l, cfg.d_ff), cfg.spiking)[0]
+    o = nn.linear(p["w2"], h, spikes=True)
+    o, bn2 = nn.batchnorm(p["bn_2"], st["bn_2"],
+                          o.reshape(-1, o.shape[-1]), train=train)
+    new_st["bn_2"] = bn2
+    return x + o.reshape(x.shape), new_st         # pre-neuron residual
+
+
+def layer_step_causal(p: Dict[str, Any], cfg, x: jax.Array, positions, *,
+                      train: bool = False,
+                      engine: Optional[EngineConfig] = None) -> jax.Array:
+    """The token-family *layer program* (causal, RoPE/rmsnorm epilogues):
+    ln1 + SSA bundle + wo + residual + ln2 + spiking MLP + residual as
+    one engine-owned step — the spiking full-attention branch of
+    ``models/transformer.apply_layer`` hands the whole layer here.
+
+    x: (T, B, S, D) residual-stream currents; positions: (S,). Returns
+    the new residual stream (T, B, S, D).
+
+    Fused eligibility = the bundle's (no qk_norm, no GQA, bias-free,
+    all-or-none quantization, even head_dim, 1-D positions, fp32
+    activations unless quantized) plus the MLP tail's: a plain
+    (up, down) MLP — a gated MLP has no fused phase mapping — and
+    binarized scores with analog context (integer contexts keep the
+    head-split wo and the blocked binary phases exact). Eligible layers
+    route through the shared custom-VJP step for every overlap mode
+    (``off`` runs the sequential oracle as its fwd — one gradient
+    program, see ``_fused_layer``); ineligible layers fall back to the
+    plain sequential composition, which still hands the bundle to
+    :func:`ssa_step_causal`.
+    """
+    engine = engine if engine is not None else get_engine()
+    from repro.core.spiking import lif_scan
+    from repro.models import nn
+    from repro.parallel.sharding import constrain
+    t, b, s_len, d = x.shape
+    heads, hd = cfg.num_heads, cfg.head_dim
+    h = nn.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    lin_ps = [p["wq"], p["wk"], p["wv"], p["wo"],
+              p["mlp"].get("up"), p["mlp"].get("down")]
+    quant = ["qw" in q for q in lin_ps if q is not None]
+    d_ff = 0 if lin_ps[4] is None else \
+        (lin_ps[4]["qw"] if "qw" in lin_ps[4] else lin_ps[4]["w"]).shape[-1]
+    flops = 6 * (t * b * s_len) * d * cfg.q_dim \
+        + 4 * (t * b * heads) * s_len * s_len * hd \
+        + 2 * (t * b * s_len) * cfg.q_dim * d \
+        + 4 * (t * b * s_len) * d * d_ff
+    positions = jnp.asarray(positions)
+    eligible = (not cfg.qk_norm
+                and cfg.num_kv_heads == cfg.num_heads
+                and set(p["mlp"]) == {"up", "down"}
+                and (all(quant) or not any(quant))
+                and not any(q is not None and "b" in q for q in lin_ps)
+                and (all(quant) or x.dtype == jnp.float32)
+                and hd % 2 == 0
+                and positions.ndim == 1
+                and cfg.spiking.binarize_scores
+                and not cfg.spiking.binarize_context)
+    plan = resolve_layer_plan(engine, h, flops)
+    if eligible:
+        dtype = x.dtype
+        if all(quant):
+            w3, sc3 = _layer_quant_w3(p, ("wq", "wk", "wv"), d, dtype)
+        else:
+            w3 = jnp.stack([p[w]["w"] for w in ("wq", "wk", "wv")])
+            sc3 = jnp.ones((3, cfg.q_dim), jnp.float32)
+        wo, sco = _layer_linear(p["wo"], cfg.q_dim, dtype)
+        w1, sc1 = _layer_linear(p["mlp"]["up"], d, dtype)
+        w2, sc2 = _layer_linear(p["mlp"]["down"], d_ff, dtype)
+        w1, w2, sc1, _ = _pad_ff(w1, w2, sc1, None, heads)
+        half = hd // 2
+        # nn.rope's table, verbatim (same f32 expression -> same values)
+        freqs = cfg.rope_theta ** (
+            -jnp.arange(0, half, dtype=jnp.float32) / half)
+        ang = positions.astype(jnp.float32)[:, None] * freqs
+        ops = {
+            "x": x, "s": h, "w3": w3, "wo": wo, "w1": w1, "w2": w2,
+            "scales": (sc3, sco, sc1, sc2),
+            "auxp": jnp.stack([jnp.cos(ang), jnp.sin(ang)]),
+            "auxo": p["ln2"]["scale"].astype(jnp.float32).reshape(1, d),
+            "aux1": None, "aux2": None,
+            "delta": p["delta"],
+        }
+        spec = _LayerSpec("rope", heads, hd, 1.0 / math.sqrt(hd), True,
+                          cfg.spiking, 1e-5, cfg.norm_eps, plan.overlap,
+                          plan.sparse,
+                          engine.block_m if engine else 128,
+                          engine.block_k if engine else 128,
+                          engine.interpret if engine else None)
+        with annotate("dual_engine.fused_layer"):
+            y = _fused_layer(ops, spec)
+        return constrain(y, "batch", "seq", "embed")
+    # sequential composition (what models/transformer.apply_layer used
+    # to inline for the spiking full-attention branch); the bundle still
+    # routes through ssa_step_causal
+    attn = ssa_step_causal(p, cfg, h, positions, train=train,
+                           engine=engine)
+    attn = constrain(attn, "batch", "seq", "model")
+    x = x + nn.linear(p["wo"], attn)
+    h2 = nn.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    up = nn.linear(p["mlp"]["up"], h2)
+    hidden = lif_scan(up, cfg.spiking)[0]
+    x = x + nn.linear(p["mlp"]["down"], hidden)
+    return constrain(x, "batch", "seq", "embed")

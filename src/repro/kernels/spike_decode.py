@@ -347,6 +347,48 @@ def gather_spike_matmul(s: jax.Array, w: jax.Array, *,
     return out[jnp.argsort(order)][:m, :n]
 
 
+def slab_decode(s: jax.Array, *, l_block: int, c_block: int,
+                cap: Optional[int] = None
+                ) -> Tuple[jax.Array, jax.Array, jax.Array, int]:
+    """Stage the decoded gather datapath for the fused layer kernel
+    (``kernels/fused_layer``): per-(timestep, batch) slab row decode
+    plus per-L-block pow2 occupancy-bucket caps.
+
+    Unlike :func:`_stage`, rows are **not** permuted — the fused kernel
+    consumes Q/K/V spikes in sequence order (the attention phases need
+    them in place), so the bucket grouping is positional: each L-block
+    of ``l_block`` consecutive rows gets capacity ``min(pow2ceil(max
+    occupancy in block), padded width)``, and the kernel skips gather
+    chunks past a block's cap. Dense rows cost their whole block its
+    bucket (the price of skipping the load-balancing sort); the tile
+    path has the same granularity, so decoded still only refines it.
+
+    s: (T, B, L, K) spikes. Returns (idx (B, T, L, Cp) int32,
+    vals (B, T, L, Cp) fp32, caps (B, T, ceil(L / l_block)) int32,
+    c_block) with Cp a multiple of the (possibly clipped) c_block;
+    index padding slots hold 0 and value padding slots exact 0.0, so
+    over-gathering up to a cap is bitwise-free.
+    """
+    t, b, l, k = s.shape
+    l_block = max(1, min(l_block, l))
+    nlb = -(-l // l_block)
+    flat = s.reshape(t * b * l, k)
+    idx, occ = decode_indices(flat, cap=cap)
+    c_block = max(1, min(c_block, idx.shape[1]))
+    idx = pad_to_multiple(idx, 1, c_block)
+    cp = idx.shape[1]
+    mask = jnp.arange(cp, dtype=jnp.int32)[None] < occ[:, None]
+    vals = jnp.where(mask, jnp.take_along_axis(flat, idx, axis=1), 0)
+    occ_pad = pad_to_multiple(occ.reshape(t * b, l), 1, l_block)
+    gmax = occ_pad.reshape(t * b, -1, l_block).max(axis=2)[:, :nlb]
+    caps = jnp.minimum(pow2ceil(gmax), cp).astype(jnp.int32)
+    idx = jnp.transpose(idx.reshape(t, b, l, cp), (1, 0, 2, 3))
+    vals = jnp.transpose(vals.reshape(t, b, l, cp).astype(jnp.float32),
+                         (1, 0, 2, 3))
+    caps = jnp.transpose(caps.reshape(t, b, nlb), (1, 0, 2))
+    return idx, vals, caps, c_block
+
+
 def quant_gather_spike_matmul(s: jax.Array, qw: jax.Array,
                               scale: jax.Array, *,
                               bias: Optional[jax.Array] = None,

@@ -160,48 +160,20 @@ def _sps(params, state, cfg: ModelConfig, images, train: bool):
     return x.reshape(tt, b, h * w, d), new_state
 
 
-def _ssa(p, st, cfg: ModelConfig, x, train: bool):
-    """Spiking self-attention with binary attention. x: (T,B,L,D) currents.
-
-    The projection+attention bundle (Q/K/V linears + BN + LIF + binary
-    attention) is owned by the engine (core.engine.ssa_step): with
-    ``overlap='fused'`` both overlay halves run as one pipelined Pallas
-    grid (Fig. 5), otherwise the engine composes the sequential
-    reference. The model keeps only what stays outside the bundle: the
-    input neuron and the output projection wo + bn_o.
-    """
-    t, b, l, d = x.shape
-    s = _lif(x, cfg)
-    from repro.core.engine import ssa_step
-    ctx, new_st = ssa_step(p, {n: st[n] for n in ("bn_q", "bn_k", "bn_v")},
-                           cfg, s, train=train)
-    new_st = dict(st, **new_st)
-    # ctx is binarized-attention output: sparse integer counts, not {0,1}
-    # spikes — but zero blocks are zero blocks, so the sparse engine skips
-    # them all the same (every spiking matmul is sparsity-aware).
-    # counts=True: under quantized weights the counts (up to L) must ride
-    # int32 lanes in the kernel, not the spikes' int8 fast path.
-    out = nn.linear(p["wo"], ctx, spikes=True, counts=True)
-    out, bn_st = nn.batchnorm(p["bn_o"], st["bn_o"],
-                              out.reshape(-1, d), train=train)
-    new_st["bn_o"] = bn_st
-    return out.reshape(t, b, l, d), new_st
-
-
 def _block(p, st, cfg: ModelConfig, x, train: bool):
-    attn, new_st = _ssa(p, st, cfg, x, train)
-    x = x + attn                                  # pre-neuron residual
-    s = _lif(x, cfg)
-    h = nn.linear(p["w1"], s, spikes=True)
-    h, bn1 = nn.batchnorm(p["bn_1"], st["bn_1"], h.reshape(-1, h.shape[-1]),
-                          train=train)
-    new_st["bn_1"] = bn1
-    h = _lif(h.reshape(*x.shape[:-1], cfg.d_ff), cfg)
-    o = nn.linear(p["w2"], h, spikes=True)
-    o, bn2 = nn.batchnorm(p["bn_2"], st["bn_2"], o.reshape(-1, o.shape[-1]),
-                          train=train)
-    new_st["bn_2"] = bn2
-    return x + o.reshape(x.shape), new_st         # pre-neuron residual
+    """One encoder layer. x: (T,B,L,D) membrane currents.
+
+    The whole layer program — input LIF + SSA bundle + wo/bn_o +
+    pre-neuron residuals + spiking MLP — is owned by the engine
+    (core.engine.layer_step): with ``overlap='fused' | 'pipeline'`` both
+    overlay halves run as one Pallas grid spanning the layer (Fig. 5,
+    with the MLP phases riding the same wavefront), otherwise the engine
+    composes the sequential reference (which still hands the SSA bundle
+    to ssa_step, so bundle-level fusion survives a layer-level
+    fallback). The model keeps only the scan plumbing.
+    """
+    from repro.core.engine import layer_step
+    return layer_step(p, st, cfg, x, train=train)
 
 
 def forward(params, cfg: ModelConfig, batch, *, train: bool = False,

@@ -150,17 +150,20 @@ def _spike(x, cfg: ModelConfig, t_steps: int):
 def apply_layer(p, cfg: ModelConfig, x, positions, kind: str, train: bool):
     """x: (B, S, D) or (T, B, S, D) in spiking mode."""
     spiking = cfg.spiking is not None
-    h = nn.rmsnorm(p["ln1"], x, cfg.norm_eps)
     if spiking and kind == "full":
-        # the whole projection+attention bundle is engine-owned: with
-        # overlap='fused' both overlay halves run as one pipelined
-        # Pallas grid (Fig. 5), otherwise the engine composes the
-        # sequential reference (projections + RoPE + LIF + causal
-        # binary attention). The sliding-window branch below keeps its
-        # banded jnp dataflow (the fused grid is full-attention only).
-        from repro.core.engine import ssa_step_causal
-        attn = ssa_step_causal(p, cfg, h, positions, train=train)
-    elif spiking:
+        # the whole layer program — ln1 + SSA bundle + wo + residual +
+        # ln2 + spiking MLP + residual — is engine-owned: with
+        # overlap='fused' | 'pipeline' both overlay halves run as one
+        # Pallas grid spanning the layer (Fig. 5, the MLP phases riding
+        # the same wavefront; pipeline adds the timestep axis to the
+        # grid), otherwise the engine composes the sequential reference
+        # (which still hands the bundle to ssa_step_causal). The
+        # sliding-window branch below keeps its banded jnp dataflow
+        # (the fused grid is full-attention only).
+        from repro.core.engine import layer_step_causal
+        return layer_step_causal(p, cfg, x, positions, train=train)
+    h = nn.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if spiking:
         t = x.shape[0]
         q, k, v = _project_qkv(p, cfg, h, positions, repeat_kv=True)
         q, k, v = (_spike(u, cfg, t) for u in (q, k, v))

@@ -185,6 +185,51 @@ def predicted_schedule(n_rows: int, k: int, density, block_m: int,
     return bucket_schedule(occ, block_m, c_block, cap=k)
 
 
+def binary_block_schedule(k_spk: np.ndarray, v_spk: np.ndarray,
+                          num_heads: int, l_block: int, delta: float,
+                          binarize: bool = True) -> np.ndarray:
+    """Numpy twin of the fused-layer kernel's **binary-engine** occupancy
+    map (``kernels/fused_layer``, phases ``qkt``/``qktv``).
+
+    The kernel skips a score block when its key L-block is all dark
+    (zeros score to zeros, which binarize to zero for ``delta > 0``) and
+    a context block when additionally its value L-block is all dark —
+    the binary-engine analog of the sparse side's tile skip. This twin
+    predicts the executed sub-block counts from the projection spikes
+    alone, with the same predicate:
+
+      ``qkt[h, lb]  = #{(t, b) : any(k_blk) or delta <= 0}``
+      ``qktv[h, lb] = #{(t, b) : qkt live and any(v_blk)}``
+
+    (``binarize=False`` makes every qkt block live — analog scores of a
+    dark key block are still exact zeros, but the kernel only skips when
+    the binarized block is provably dark.)
+
+    k_spk / v_spk: ``(T, B, L, num_heads * head_dim)`` spike tensors as
+    the projection phases emit them. Returns ``(num_heads, 2,
+    n_l_blocks)`` int64 counts, cross-validated sub-block-exact against
+    the kernel's ``counts[:, 3:5, :]`` by the dual-engine bench.
+    """
+    k_spk = np.asarray(k_spk)
+    v_spk = np.asarray(v_spk)
+    t, b, l, q_dim = k_spk.shape
+    hd = q_dim // num_heads
+    nlb = -(-l // l_block)
+    out = np.zeros((num_heads, 2, nlb), np.int64)
+    for h in range(num_heads):
+        ks = k_spk[..., h * hd:(h + 1) * hd]
+        vs = v_spk[..., h * hd:(h + 1) * hd]
+        for lb in range(nlb):
+            r0, r1 = lb * l_block, min(l, (lb + 1) * l_block)
+            k_live = ks[:, :, r0:r1].any(axis=(2, 3))
+            if not binarize or delta <= 0:
+                k_live = np.ones_like(k_live)
+            v_live = k_live & vs[:, :, r0:r1].any(axis=(2, 3))
+            out[h, 0, lb] = int(k_live.sum())
+            out[h, 1, lb] = int(v_live.sum())
+    return out
+
+
 @dataclass(frozen=True)
 class BalanceResult:
     crossbar_cycles: int
